@@ -1,0 +1,48 @@
+"""Render §Dry-run and §Roofline markdown tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as R
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | step | lower s | compile s | temp/chip GiB "
+        "| coll GiB/chip | coll ops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        coll = rec["collectives"]
+        ops = ",".join(f"{k.split('-')[-1][:4]}:{v['count']}"
+                       for k, v in coll.items()
+                       if isinstance(v, dict) and v.get("count"))
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | {rec['step']}"
+            f" | {rec['lower_s']} | {rec['compile_s']}"
+            f" | {(rec['memory']['temp_bytes'] or 0) / 2**30:.2f}"
+            f" | {coll['total_bytes'] / 2**30:.2f} | {ops} |")
+    return "\n".join(lines)
+
+
+def main():
+    raw = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        with open(path) as f:
+            raw.append(json.load(f))
+    print(f"## §Dry-run ({len(raw)} combinations)\n")
+    print(dryrun_table(raw))
+    print("\n## §Roofline\n")
+    rows = R.load_all()
+    R.write_csv(rows)
+    print(R.markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

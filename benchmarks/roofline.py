@@ -1,0 +1,137 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+For every experiments/dryrun/*.json:
+
+    compute term    = HLO_FLOPs_per_chip / 197e12           (bf16 MXU peak)
+    memory term     = HLO_bytes_per_chip / 819e9             (HBM bw)
+    collective term = collective_bytes_per_chip / 50e9       (ICI per link)
+
+``cost_analysis()`` on the post-SPMD module reports *per-device* FLOPs and
+bytes; collective bytes are parsed per-device from the HLO. The f32->bf16
+correction: gradient-sync collectives were lowered in f32 on this CPU
+backend (XLA bug, see launch/dryrun.py) but are bf16 on the TPU target, so
+f32 collective bytes in *train* steps are halved.
+
+Outputs experiments/roofline.csv and a markdown table; also computes
+MODEL_FLOPS = 6*N(_active)*D and the usefulness ratio MODEL/HLO FLOPs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["chips"]
+    ct = rec.get("cost_true")
+    if ct:
+        # scan-aware extrapolated costs (launch/cost_extrapolate.py);
+        # wire bytes (ring realization per op) when available
+        flops = ct["flops"] or 0.0
+        bytes_acc = ct["bytes_accessed"] or 0.0
+        coll = ct.get("coll_wire", ct["coll_total"])
+        f32 = ct.get("coll_wire_f32", ct["coll_f32"])
+    else:
+        flops = rec["cost"]["flops"] or 0.0
+        bytes_acc = rec["cost"]["bytes_accessed"] or 0.0
+        coll = rec["collectives"]["total_bytes"]
+        f32 = rec["collectives"].get("by_dtype", {}).get("f32", 0)
+    # f32 -> bf16 exchange correction for the CPU-lowered gradient sync
+    if rec["step"] == "train":
+        coll -= f32 / 2
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # model flops: train ~ 6ND (fwd+bwd); inference ~ 2ND
+    n = rec["active_params"]
+    d_tokens = SHAPE_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["step"] == "train" else 2.0
+    model_flops_global = mult * n * d_tokens
+    model_flops_chip = model_flops_global / chips
+    useful = model_flops_chip / flops if flops else float("nan")
+
+    step_time = max(terms.values())          # perfectly-overlapped bound
+    mfu = model_flops_chip / (step_time * PEAK_FLOPS) if step_time else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "step", "fsdp")},
+        "cost_true": bool(ct),
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": model_flops_chip,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": useful,
+        "bound_step_s": step_time,
+        "mfu_bound": mfu,
+        "coll_bytes_per_chip": coll,
+        "temp_bytes_per_chip_gib": (rec["memory"]["temp_bytes"] or 0) / 2**30,
+    }
+
+
+def load_all(dirname: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(analyze(json.load(f)))
+    return rows
+
+
+def write_csv(rows, path="experiments/roofline.csv"):
+    if not rows:
+        return
+    keys = list(rows[0])
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(f"{r[k]:.4e}" if isinstance(r[k], float)
+                             else str(r[k]) for k in keys) + "\n")
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | MFU-bound |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    rows = load_all()
+    write_csv(rows)
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": round(r["bound_step_s"] * 1e6, 1),
+            "derived": (f"dom={r['dominant']},useful={r['useful_ratio']:.2f},"
+                        f"mfu<={r['mfu_bound'] * 100:.1f}%"),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    write_csv(rows)
+    print(markdown_table(rows))

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows (harness contract).
+
+  table 2/6 (all-reduce schemes + scaling)   -> benchmarks.allreduce
+  table 5   (LS / batch-size-control ablation) -> benchmarks.convergence
+  table 1/6 (time-to-train + throughput model) -> benchmarks.throughput
+  roofline  (from dry-run artifacts, if present) -> benchmarks.roofline
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> None:
+    from benchmarks import allreduce, convergence, roofline, throughput
+
+    rows = []
+    for mod in (allreduce, throughput, convergence, roofline):
+        try:
+            rows.extend(mod.run())
+        except Exception as e:  # noqa: BLE001
+            rows.append({"name": f"{mod.__name__}_ERROR",
+                         "us_per_call": -1, "derived": repr(e)[:80]})
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,84 @@
+"""Paper Table 1 / Table 6 analogue: time-to-train and scaling efficiency.
+
+Wall-clock ImageNet time cannot be measured here; we reproduce the paper's
+tables with the calibrated analytic model (single-GPU throughput from the
+paper's own Table 6 anchor + the alpha-beta communication model of
+core.collectives):
+
+  table6: images/s and scaling efficiency at 4..4096 GPUs with 2D-torus
+          (compare: paper measured 84.75% @1024, 73.44% @4096)
+  table1: end-to-end 90-epoch time at Exp-2 settings (3456 GPUs, 54K batch)
+          (paper: 122 s for the Exp-2 recipe)
+
+Also a real measured number: local train-step wall time of the tiny ResNet
+(per-image us on this CPU) to anchor that the step function itself is real.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collectives
+from repro.core.topology import paper_table4_grid
+
+IMAGENET = 1_281_167
+EPOCHS = 90
+PER_GPU = 2565 / 4            # img/s/GPU measured by the paper at 1 node
+GRAD_BYTES = 51e6             # fp16 ResNet-50 gradient
+LINK_BW = 25e9                # IB EDR x2 per the paper's hardware
+LATENCY = 5e-6
+
+
+def _step_time(n_gpus: int, per_worker: int = 32) -> float:
+    y, x = paper_table4_grid(n_gpus)
+    comm = collectives.comm_cost_model("torus2d", GRAD_BYTES, x, y,
+                                       LINK_BW, LATENCY)["seconds"]
+    return per_worker / PER_GPU + comm
+
+
+def run() -> list[dict]:
+    rows = []
+    paper_tbl6 = {4: 2565, 1024: 556522, 2048: 1091357,
+                  3456: 1641853, 4096: 1929054}
+    base = 32 / _step_time(4)              # img/s/GPU at 4 GPUs (reference)
+    for n in (4, 1024, 2048, 3456, 4096):
+        ips = n * 32 / _step_time(n)
+        eff = (ips / n) / base * 100
+        rows.append({
+            "name": f"table6_throughput_n{n}",
+            "us_per_call": round(_step_time(n) * 1e6, 1),
+            "derived": f"img/s={ips:.0f},eff={eff:.1f}%,paper={paper_tbl6[n]}",
+        })
+
+    # Table 1: Exp-2 (3456 GPUs, 54K batch: 16/worker) 90-epoch time
+    t_step = _step_time(3456, per_worker=16)
+    steps = EPOCHS * IMAGENET / (16 * 3456)
+    total = steps * t_step
+    rows.append({"name": "table1_exp2_time",
+                 "us_per_call": round(t_step * 1e6, 1),
+                 "derived": f"predicted={total:.0f}s,paper=122s"})
+
+    # measured: one real local ResNet-tiny step on this host
+    from repro.data.synthetic import SyntheticImageNet
+    from repro.models import resnet
+    cfg = resnet.ResNetConfig.tiny()
+    params = resnet.init(jax.random.key(0), cfg)
+    data = SyntheticImageNet(num_classes=10, image_size=32)
+    imgs, labels = data.batch(0, 8)
+
+    @jax.jit
+    def fwd(p, x):
+        return resnet.apply(p, x, cfg).sum()
+
+    fwd(params, imgs).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fwd(params, imgs).block_until_ready()
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    rows.append({"name": "measured_resnet_tiny_fwd",
+                 "us_per_call": round(us, 1), "derived": "8img,cpu"})
+    return rows

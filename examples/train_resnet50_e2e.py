@@ -1,0 +1,89 @@
+"""End-to-end driver: the paper's exact model (ResNet-50, 25.6M params)
+trained for a few hundred steps with the complete recipe -- 2D-torus grad
+sync, LARS, label smoothing, batch-size control, SyncBN, bf16 compute.
+
+    PYTHONPATH=src python examples/train_resnet50_e2e.py [--steps 300]
+                                                         [--image-size 64]
+
+Reduced image resolution keeps CPU wall-time sane; every component is the
+production path. History is printed and written to
+experiments/e2e_resnet50_history.json.
+"""
+
+import argparse
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.data import augment
+from repro.core.grad_sync import GradSyncConfig
+from repro.core.schedules import BatchSchedule, BatchStage
+from repro.core.batch_control import build_plan
+from repro.data.synthetic import SyntheticImageNet
+from repro.models import resnet
+from repro.train.state import TrainState
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@jax.jit
+def _augment_batch(key, images):
+    return augment.augment(key, images, out_hw=images.shape[1:3])
+
+
+def _augmented(data, i, gb, image_size):
+    """Paper §3.2 augmentation pipeline applied on-device."""
+    images, labels = data.batch(i, gb)
+    return _augment_batch(jax.random.key(i), images), labels
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=64)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((2, 4), ("dy", "dx"))
+    cfg = resnet.ResNetConfig.resnet50(num_classes=args.classes,
+                                       image_size=args.image_size)
+    data = SyntheticImageNet(num_classes=args.classes,
+                             image_size=args.image_size, noise=1.0)
+
+    def loss_fn(params, batch, dp_axes):
+        images, labels = batch
+        logits = resnet.apply(params, images, cfg, dp_axes=dp_axes)
+        return (losses.label_smoothing_xent(logits, labels, 0.1),
+                jnp.zeros((), jnp.float32))
+
+    # Exp.1-style batch-size control: 2/worker -> 4/worker at 1/3 of run
+    sched = BatchSchedule((BatchStage(0, 1.0, 2), BatchStage(1.0, 4.0, 4)))
+    plan = build_plan(sched, dataset_size=4096, n_workers=8,
+                      max_steps=args.steps)
+    trainer = Trainer(
+        mesh=mesh, dp_axes=("dy", "dx"), loss_fn=loss_fn,
+        cfg=TrainerConfig(schedule="B", label_smoothing=0.1,
+                          grad_sync=GradSyncConfig(strategy="torus2d",
+                                                   comm_dtype=jnp.bfloat16),
+                          log_every=10),
+        plan=plan, data_fn=lambda i, gb: _augmented(data, i, gb,
+                                                    args.image_size))
+
+    params = resnet.init(jax.random.key(0), cfg)
+    print(f"ResNet-50: {resnet.num_params(params) / 1e6:.1f}M params, "
+          f"{args.image_size}px, plan {plan.total_steps} steps")
+    state, history = trainer.run(TrainState.create(params))
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/e2e_resnet50_history.json", "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f} "
+          f"({int(state.step)} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Label-smoothing cross-entropy (paper §2.1, Szegedy et al. [13]).
+
+With smoothing factor alpha and K classes, the target distribution is
+    q(k) = (1 - alpha) * onehot(k) + alpha / K
+and the loss is KL-equivalent cross-entropy  -sum_k q(k) log p(k).
+
+The fused Pallas kernel (``repro.kernels.ls_xent``) computes
+log-softmax + smoothed NLL in one VMEM pass -- the 256K-vocab archs make
+this memory-bound; ``use_kernel`` routes through it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def label_smoothing_xent(logits: jax.Array, labels: jax.Array,
+                         smoothing: float = 0.1, use_kernel: bool = False,
+                         where=None) -> jax.Array:
+    """Mean smoothed cross-entropy.
+
+    logits: (..., K) float; labels: (...) int. ``where``: optional bool mask
+    over the batch positions (padding).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        per = kops.ls_xent(logits, labels, smoothing=smoothing)
+    else:
+        per = ls_xent_ref(logits, labels, smoothing)
+    if where is not None:
+        per = jnp.where(where, per, 0.0)
+        return per.sum() / jnp.maximum(where.sum(), 1)
+    return per.mean()
+
+
+def ls_xent_ref(logits: jax.Array, labels: jax.Array, smoothing: float) -> jax.Array:
+    """Per-example smoothed NLL, pure jnp (oracle for the Pallas kernel)."""
+    logits = logits.astype(jnp.float32)
+    k = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mean_logp = logp.mean(axis=-1)
+    return (1.0 - smoothing) * nll - smoothing * mean_logp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, where=None) -> jax.Array:
+    """Plain CE (the no-LS ablation)."""
+    return label_smoothing_xent(logits, labels, smoothing=0.0, where=where)
+
+
+def top1_accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return (logits.argmax(-1) == labels).mean()

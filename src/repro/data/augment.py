@@ -1,0 +1,102 @@
+"""Image augmentation ops in pure JAX (paper §3.2 lists NNL's pipeline:
+padding, scaling, rotations, resizing, distortion, flipping, brightness
+adjustment, contrast adjustment, and noising).
+
+Every op is jit-able and batched (B, H, W, C), driven by a PRNG key, so the
+input pipeline runs on-device and its cost is visible in the step profile.
+Rotation/scaling/distortion are implemented as a single affine resample
+(bilinear gather) -- one memory pass for the geometric group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def random_flip(key, images):
+    flip = jax.random.bernoulli(key, 0.5, (images.shape[0],))
+    return jnp.where(flip[:, None, None, None], images[:, :, ::-1], images)
+
+
+def random_brightness(key, images, max_delta=0.2):
+    d = jax.random.uniform(key, (images.shape[0], 1, 1, 1),
+                           minval=-max_delta, maxval=max_delta)
+    return images + d
+
+
+def random_contrast(key, images, lower=0.8, upper=1.2):
+    f = jax.random.uniform(key, (images.shape[0], 1, 1, 1),
+                           minval=lower, maxval=upper)
+    mean = images.mean(axis=(1, 2), keepdims=True)
+    return (images - mean) * f + mean
+
+
+def random_noise(key, images, std=0.02):
+    return images + std * jax.random.normal(key, images.shape, images.dtype)
+
+
+def _affine_resample(images, mats, out_hw):
+    """Batched affine warp with bilinear sampling.
+
+    mats: (B, 2, 3) mapping output pixel coords -> input coords.
+    """
+    B, H, W, C = images.shape
+    oh, ow = out_hw
+    ys, xs = jnp.meshgrid(jnp.arange(oh, dtype=jnp.float32),
+                          jnp.arange(ow, dtype=jnp.float32), indexing="ij")
+    grid = jnp.stack([ys.ravel(), xs.ravel(), jnp.ones(oh * ow)], 0)  # (3, P)
+    src = jnp.einsum("bij,jp->bip", mats, grid)                        # (B,2,P)
+    sy, sx = src[:, 0], src[:, 1]
+    y0 = jnp.floor(sy)
+    x0 = jnp.floor(sx)
+    wy = sy - y0
+    wx = sx - x0
+
+    def gather(yi, xi):
+        yc = jnp.clip(yi.astype(jnp.int32), 0, H - 1)
+        xc = jnp.clip(xi.astype(jnp.int32), 0, W - 1)
+        idx = yc * W + xc                                              # (B, P)
+        flat = images.reshape(B, H * W, C)
+        return jnp.take_along_axis(flat, idx[..., None], axis=1)
+
+    out = (gather(y0, x0) * ((1 - wy) * (1 - wx))[..., None]
+           + gather(y0, x0 + 1) * ((1 - wy) * wx)[..., None]
+           + gather(y0 + 1, x0) * (wy * (1 - wx))[..., None]
+           + gather(y0 + 1, x0 + 1) * (wy * wx)[..., None])
+    return out.reshape(B, oh, ow, C)
+
+
+def random_affine(key, images, out_hw=None, max_rot=15.0, scale=(0.7, 1.3),
+                  max_shift=0.1):
+    """Rotation + scale + shift ('rotations, scaling, distortion, resizing')
+    in one bilinear resample."""
+    B, H, W, _ = images.shape
+    oh, ow = out_hw or (H, W)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ang = jnp.deg2rad(jax.random.uniform(k1, (B,), minval=-max_rot,
+                                         maxval=max_rot))
+    sc = jax.random.uniform(k2, (B,), minval=scale[0], maxval=scale[1])
+    shift = jax.random.uniform(k3, (B, 2), minval=-max_shift,
+                               maxval=max_shift) * jnp.asarray([H, W])
+    cos, sin = jnp.cos(ang) / sc, jnp.sin(ang) / sc
+    cy, cx = (H - 1) / 2, (W - 1) / 2
+    ocy, ocx = (oh - 1) / 2, (ow - 1) / 2
+    # out (y,x) -> rotate/scale about center + shift
+    m = jnp.stack([
+        jnp.stack([cos, -sin, cy - cos * ocy + sin * ocx + shift[:, 0]], 1),
+        jnp.stack([sin, cos, cx - sin * ocy - cos * ocx + shift[:, 1]], 1),
+    ], 1)                                                              # (B,2,3)
+    return _affine_resample(images, m, (oh, ow))
+
+
+def augment(key, images, out_hw=(224, 224)):
+    """The paper's full augmentation stack, fused order: geometric ->
+    flip -> photometric -> noise."""
+    k = jax.random.split(key, 5)
+    x = random_affine(k[0], images, out_hw)
+    x = random_flip(k[1], x)
+    x = random_brightness(k[2], x)
+    x = random_contrast(k[3], x)
+    x = random_noise(k[4], x)
+    return x

@@ -1,0 +1,52 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode so
+every test validates the exact kernel body; on TPU the same call compiles
+to Mosaic. ``INTERPRET`` flips automatically off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lars_update as _lars
+from repro.kernels import ls_xent as _lsx
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def lars_update(p, g, v, *, lr, mom, eta, weight_decay, eps,
+                interpret: bool | None = None):
+    """Fused LARS step; norms computed outside (tiny XLA reductions)."""
+    interpret = INTERPRET if interpret is None else interpret
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    w_norm = jnp.linalg.norm(p32)
+    g_norm = jnp.linalg.norm(g32)
+    trust = jnp.where((w_norm > 0) & (g_norm > 0),
+                      eta * w_norm / (g_norm + weight_decay * w_norm + eps),
+                      1.0)
+    return _lars.lars_update_pallas(
+        p32, g32, v, trust_lr=trust * lr, mom=mom,
+        weight_decay=weight_decay, interpret=interpret)
+
+
+def ls_xent(logits, labels, *, smoothing: float,
+            interpret: bool | None = None):
+    """Per-row label-smoothed cross-entropy, fused over the vocab dim."""
+    interpret = INTERPRET if interpret is None else interpret
+    return _lsx.ls_xent_pallas(logits, labels, smoothing=smoothing,
+                               interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, interpret: bool | None = None):
+    """Flash attention fwd (TPU kernel; HBM traffic O(S*D) not O(S^2))."""
+    from repro.kernels import flash_attn as _fa
+    interpret = INTERPRET if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=interpret)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lars_update_ref(p, g, v, *, lr, mom, eta, weight_decay, eps):
+    """Fused LARS elementwise update, fp32.
+
+    trust = eta*||p|| / (||g|| + wd*||p|| + eps)  (1.0 when either norm is 0)
+    v'    = mom*v + trust*lr*(g + wd*p)
+    p'    = p - v'
+    """
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w_norm = jnp.linalg.norm(p)
+    g_norm = jnp.linalg.norm(g)
+    trust = jnp.where((w_norm > 0) & (g_norm > 0),
+                      eta * w_norm / (g_norm + weight_decay * w_norm + eps),
+                      1.0)
+    v_new = mom * v + (trust * lr) * (g + weight_decay * p)
+    return p - v_new, v_new
+
+
+def ls_xent_ref(logits, labels, smoothing):
+    """Per-row label-smoothed NLL (same math as core.losses.ls_xent_ref)."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return (1.0 - smoothing) * nll - smoothing * logp.mean(axis=-1)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """Gemma-style (1+w) RMSNorm, fp32 math."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """Oracle for kernels.flash_attn: plain masked softmax attention.
+
+    q: (B, S, H, D); k/v: (B, Skv, Hkv, D), GQA by head repetition.
+    """
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    k = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf * scale, k)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v).astype(q.dtype)

@@ -1,0 +1,291 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and record memory / FLOPs /
+collective-traffic analysis. No arrays are ever allocated: inputs are
+ShapeDtypeStructs; this proves the distribution config is coherent.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+# The production mesh needs 512 placeholder devices; jax locks the device
+# count at first init, so this MUST precede every other import.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, ShapeConfig, long_context_variant, needs_long_variant
+from repro.core import losses
+from repro.core.grad_sync import GradSyncConfig, sync_tree
+from repro.core import lars as lars_lib
+from repro.core.topology import select_grid
+from repro.launch import hlo_stats
+from repro.launch.mesh import (cache_pspecs, dp_axes_of, make_production_mesh,
+                               param_pspecs, with_shardings)
+from repro.models import transformer as T
+
+# archs whose params cannot be data-replicated even at TP=16: jit-auto
+# fsdp sharding (ZeRO-style; DESIGN.md §3). The rest use the paper's
+# explicit shard_map gradient sync.
+FSDP_ARCHS = {"llama-3.2-vision-90b", "kimi-k2-1t-a32b", "llama3-405b",
+              "gemma2-27b"}
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_spec(batch: int, mesh) -> P:
+    """Shard the batch over DP axes only when divisible (long_500k has B=1)."""
+    dp = dp_axes_of(mesh)
+    import numpy as np
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    return P(dp) if batch % dp_size == 0 else P()
+
+
+def arch_for(arch_id: str, shape: ShapeConfig) -> T.ArchConfig:
+    cfg = registry.get(arch_id)
+    if shape.name == "long_500k":
+        cfg = long_context_variant(cfg)
+    if shape.step == "train":
+        cfg = dataclasses.replace(cfg, remat=True)
+    return cfg
+
+
+def _vision_sds(cfg, batch, mesh, dp):
+    if not cfg.vision_tokens:
+        return None
+    return sds((batch, cfg.vision_tokens, cfg.cross_kv_dim), jnp.bfloat16,
+               mesh, batch_spec(batch, mesh))
+
+
+# ---------------------------------------------------------------------------
+# step builders: return (jitted_fn, args_tree_of_SDS)
+# ---------------------------------------------------------------------------
+
+def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
+                fuse=None):
+    dp = dp_axes_of(mesh)
+    fsdp = arch_id in FSDP_ARCHS
+    params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
+    pspecs = param_pspecs(params_sds, fsdp=fsdp, mesh=mesh)
+    params_sds = with_shardings(params_sds, mesh, pspecs)
+    mom_sds = params_sds   # momentum mirrors params
+    tokens = sds((shape.global_batch, shape.seq_len), jnp.int32, mesh, P(dp))
+    labels = tokens
+    vision = _vision_sds(cfg, shape.global_batch, mesh, dp)
+
+    def loss_of(params, tokens, labels, vision):
+        logits, aux = T.forward(params, tokens, cfg, vision=vision)
+        return losses.label_smoothing_xent(logits, labels, 0.1) + 0.01 * aux
+
+    if fsdp:
+        # jit-auto data+tensor sharding: XLA derives the ZeRO collective
+        # schedule from in/out shardings (beyond-paper regime, DESIGN.md §3)
+        def step(params, mom, tokens, labels, vision):
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
+                                                      vision)
+            new_p, new_m = lars_lib.update(
+                params, grads, {"momentum": mom}, lr=1.0, momentum=0.9)
+            return loss, new_p, new_m["momentum"]
+
+        out_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)
+        fn = jax.jit(step, out_shardings=(NamedSharding(mesh, P()),
+                                          out_sh, out_sh))
+    else:
+        # the paper's technique: manual DP grad sync under shard_map.
+        # fuse=False: leaves are model-sharded (TP), raveling them would
+        # force gathers. comm_dtype: the TPU target exchanges gradients in
+        # bf16 (paper: fp16), but XLA's *CPU* AllReducePromotion pass
+        # crashes on bf16 partial all-reduces over model-sharded operands
+        # ("Invalid binary instruction opcode copy"); on CPU we lower the
+        # exchange in f32 and the roofline applies the documented /2
+        # correction for gradient traffic (EXPERIMENTS.md §Roofline).
+        comm_dtype = (jnp.bfloat16 if jax.default_backend() == "tpu"
+                      else jnp.float32)
+        grid = select_grid(dp)
+        gcfg = GradSyncConfig(strategy=sync_strategy,
+                              fuse=False if fuse is None else fuse,
+                              comm_dtype=comm_dtype)
+
+        def step(params, mom, tokens, labels, vision):
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
+                                                      vision)
+            grads = sync_tree(grads, grid, gcfg)
+            new_p, new_m = lars_lib.update(
+                params, grads, {"momentum": mom}, lr=1.0, momentum=0.9)
+            return jax.lax.pmean(loss, dp), new_p, new_m["momentum"]
+
+        smapped = jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(), P(dp), P(dp),
+                      P(dp) if vision is not None else P()),
+            out_specs=(P(), P(), P()),
+            axis_names=frozenset(dp), check_vma=False)
+        fn = jax.jit(smapped)
+
+    # vision=None is an empty pytree: jit/shard_map treat it transparently
+    return fn, (params_sds, mom_sds, tokens, labels, vision)
+
+
+def build_prefill(arch_id, cfg, shape, mesh):
+    dp = dp_axes_of(mesh)
+    fsdp = arch_id in FSDP_ARCHS
+    params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
+    params_sds = with_shardings(params_sds, mesh,
+                                param_pspecs(params_sds, fsdp=fsdp, mesh=mesh))
+    tokens = sds((shape.global_batch, shape.seq_len), jnp.int32, mesh,
+                 batch_spec(shape.global_batch, mesh))
+    vision = _vision_sds(cfg, shape.global_batch, mesh, dp)
+
+    def fn(params, tokens, vision):
+        return T.prefill(params, tokens, cfg, vision=vision)
+
+    return jax.jit(fn, static_argnames=()), (params_sds, tokens, vision)
+
+
+def build_decode(arch_id, cfg, shape, mesh):
+    dp = dp_axes_of(mesh)
+    fsdp = arch_id in FSDP_ARCHS
+    params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
+    params_sds = with_shardings(params_sds, mesh,
+                                param_pspecs(params_sds, fsdp=fsdp, mesh=mesh))
+    B = shape.global_batch
+    cache_sds = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, shape.seq_len))
+    cache_sds = with_shardings(cache_sds, mesh,
+                               cache_pspecs(cache_sds, dp, mesh))
+    token = sds((B, 1), jnp.int32, mesh, batch_spec(B, mesh))
+    index = sds((), jnp.int32, mesh, P())
+
+    def fn(params, token, cache, index):
+        return T.decode_step(params, token, cache, index, cfg)
+
+    return jax.jit(fn), (params_sds, token, cache_sds, index)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            sync_strategy: str = "torus2d", out_dir: str = "experiments/dryrun",
+            save: bool = True, quiet: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = arch_for(arch_id, shape)
+
+    t0 = time.time()
+    if shape.step == "train":
+        fn, args = build_train(arch_id, cfg, shape, mesh, sync_strategy)
+    elif shape.step == "prefill":
+        fn, args = build_prefill(arch_id, cfg, shape, mesh)
+    else:
+        fn, args = build_decode(arch_id, cfg, shape, mesh)
+
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_stats.collective_stats(hlo)
+
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "step": shape.step, "chips": int(n_chips),
+        "fsdp": arch_id in FSDP_ARCHS,
+        "sync_strategy": sync_strategy if shape.step == "train" else None,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": coll,
+        "model_params": cfg.num_params(),
+        "active_params": cfg.active_params(),
+        "grad_comm_dtype": ("f32-on-cpu(bf16-on-tpu)"
+                            if shape.step == "train" else None),
+    }
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    if not quiet:
+        mb = (result["memory"]["temp_bytes"] or 0) / n_chips / 2**30
+        print(f"[OK] {arch_id:22s} {shape_name:12s} {mesh_name:10s} "
+              f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s "
+              f"flops {cost.get('flops', 0):.3e} "
+              f"coll {coll['total_bytes'] / 2**30:.2f}GiB "
+              f"temp/chip {mb:.2f}GiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sync", default="torus2d",
+                    choices=["psum", "ring", "hierarchical", "torus2d"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = registry.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = []
+    for mp in meshes:
+        for arch_id in archs:
+            for shape_name in shapes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(
+                    args.out, f"{arch_id}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[SKIP] {arch_id} {shape_name} {mesh_name}")
+                    continue
+                try:
+                    run_one(arch_id, shape_name, mp, args.sync, args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch_id, shape_name, mp, repr(e)))
+                    print(f"[FAIL] {arch_id} {shape_name} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("ALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

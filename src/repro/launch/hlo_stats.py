@@ -1,0 +1,108 @@
+"""Parse collective traffic and op stats out of post-SPMD HLO text.
+
+``collective_bytes`` is not in ``compiled.cost_analysis()``; we recover it
+from the optimized HLO: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op's *output* bytes are summed per op kind
+(output bytes == bytes received per device, the roofline-relevant number;
+for reduce-scatter the on-wire volume per device is (n-1)/n of the input --
+we report output bytes and note the convention in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[16,4096]{1,0} all-gather(...)
+#        ROOT %r = (f32[8]{0}, f32[8]{0}) tuple(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^\n]*)", re.M)
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:                      # [n_groups, group_size]<=[...]
+        return int(m.group(2))
+    return 2
+
+
+def _wire_bytes(kind: str, out_bytes: int, n: int) -> float:
+    """Bytes per device on the wire for a ring realization of the op.
+
+    all-reduce: 2*(n-1)/n * size; all-gather: (n-1)/n * output;
+    reduce-scatter: (n-1) * output (input is n*output);
+    all-to-all: (n-1)/n * size; collective-permute: full size.
+    """
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * out_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * out_bytes
+    if kind == "reduce-scatter":
+        return float((n - 1) * out_bytes)
+    if kind == "all-to-all":
+        return (n - 1) / n * out_bytes
+    return float(out_bytes)    # collective-permute
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """-> {op_kind: {"count", "bytes"}, "by_dtype": {dt: bytes},
+    "total_bytes", "total_count"}. Per-dtype split lets the roofline apply
+    the f32->bf16 exchange correction for the CPU-lowered gradient sync."""
+    out: dict = {k: {"count": 0, "bytes": 0, "wire_bytes": 0.0}
+                 for k in _COLLECTIVES}
+    by_dtype: dict[str, int] = defaultdict(int)
+    wire_by_dtype: dict[str, float] = defaultdict(float)
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind, rest = m.groups()
+        nb = _nbytes(dtype, dims)
+        wb = _wire_bytes(kind, nb, _group_size(rest))
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nb
+        out[kind]["wire_bytes"] += wb
+        by_dtype[dtype] += nb
+        wire_by_dtype[dtype] += wb
+    out["by_dtype"] = dict(by_dtype)
+    out["wire_by_dtype"] = dict(wire_by_dtype)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict) and "bytes" in v)
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for k, v in out.items()
+                                  if isinstance(v, dict) and "wire_bytes" in v)
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict) and "count" in v)
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Rough instruction histogram (op name -> count) for schedule audits."""
+    counts: dict[str, int] = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\()?[a-z0-9]+\[[^\]]*\][^ ]*\s*([a-z][\w-]*)\(",
+                         hlo_text):
+        counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

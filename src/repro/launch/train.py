@@ -1,0 +1,92 @@
+"""Training launcher: ``--arch <id>`` + paper recipe on the current mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 20 [--sync torus2d] [--schedule B] [--batch-stages 2,4]
+
+On this CPU container ``--smoke`` (reduced config, 8 host devices) is the
+only runnable mode; on a real pod the same entrypoint builds the production
+mesh and the full config. The paper's recipe -- 2D-torus gradient sync,
+LARS, label smoothing, batch-size control -- is the default.
+"""
+
+import argparse
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import losses
+from repro.core.grad_sync import GradSyncConfig
+from repro.core.schedules import BatchSchedule, BatchStage
+from repro.core.batch_control import build_plan
+from repro.data.synthetic import SyntheticTokens
+from repro.models import transformer as T
+from repro.train.state import TrainState
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(registry.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--sync", default="torus2d",
+                    choices=["psum", "ring", "hierarchical", "torus2d"])
+    ap.add_argument("--schedule", default="B", choices=["A", "B"])
+    ap.add_argument("--label-smoothing", type=float, default=0.1)
+    ap.add_argument("--batch-stages", default="2,4",
+                    help="comma per-worker batch sizes, staged equally")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = registry.get_smoke(args.arch)
+        mesh = jax.make_mesh((2, 4), ("dy", "dx"))
+        dp_axes = ("dy", "dx")
+    else:
+        from repro.launch.mesh import dp_axes_of, make_production_mesh
+        cfg = registry.get(args.arch)
+        mesh = make_production_mesh()
+        dp_axes = dp_axes_of(mesh)
+    n_workers = int(jax.device_count() if args.smoke else 256)
+
+    data = SyntheticTokens(vocab=cfg.vocab)
+
+    def loss_fn(params, batch, dp):
+        tokens, labels = batch
+        logits, aux = T.forward(params, tokens, cfg)
+        return losses.label_smoothing_xent(
+            logits, labels, args.label_smoothing), aux
+
+    sizes = [int(s) for s in args.batch_stages.split(",")]
+    span = 1.0
+    stages = tuple(
+        BatchStage(i * span, (i + 1) * span, s) for i, s in enumerate(sizes))
+    plan = build_plan(BatchSchedule(stages), dataset_size=n_workers * 512,
+                      n_workers=n_workers, max_steps=args.steps)
+
+    trainer = Trainer(
+        mesh=mesh, dp_axes=dp_axes, loss_fn=loss_fn,
+        cfg=TrainerConfig(
+            schedule=args.schedule, label_smoothing=args.label_smoothing,
+            grad_sync=GradSyncConfig(strategy=args.sync, fuse=False,
+                                     comm_dtype=jnp.bfloat16),
+            log_every=5),
+        plan=plan, data_fn=lambda i, gb: data.batch(i, gb, args.seq),
+        checkpoint_dir=args.checkpoint_dir)
+
+    print(f"training {cfg.name} ({cfg.num_params() / 1e6:.1f}M params) "
+          f"with sync={args.sync} schedule={args.schedule}")
+    state = TrainState.create(T.init(jax.random.key(0), cfg))
+    state, history = trainer.run(state)
+    print(f"done: loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""ResNet-50 (He et al. [7]), v1.5 bottleneck, faithful to the paper:
+
+- He fan-in init; the last BN gamma of every residual block is zero-init
+  (You et al. [10], which §3.2 cites for initialization).
+- BN "without moving average": train-time batch statistics, synchronized
+  across data-parallel replicas in fp32; eval statistics come from a
+  calibration pass (``collect_stats``).
+- Mixed precision: params are fp32 masters, fwd/bwd runs in ``compute_dtype``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    stage_sizes: tuple[int, ...] = (3, 4, 6, 3)      # ResNet-50
+    width: int = 64
+    num_classes: int = 1000
+    compute_dtype: Any = jnp.bfloat16
+    image_size: int = 224
+
+    @staticmethod
+    def resnet50(**kw):
+        return ResNetConfig(**kw)
+
+    @staticmethod
+    def tiny(**kw):
+        """Reduced variant for CPU tests: 2 stages x 1 block, width 8."""
+        kw.setdefault("stage_sizes", (1, 1))
+        kw.setdefault("width", 8)
+        kw.setdefault("num_classes", 10)
+        kw.setdefault("image_size", 32)
+        return ResNetConfig(**kw)
+
+
+def _bottleneck_init(key, cin, inner, cout):
+    k = jax.random.split(key, 4)
+    p = {
+        "conv1": L.conv_init(k[0], 1, 1, cin, inner),
+        "bn1": L.batchnorm_init(inner),
+        "conv2": L.conv_init(k[1], 3, 3, inner, inner),
+        "bn2": L.batchnorm_init(inner),
+        "conv3": L.conv_init(k[2], 1, 1, inner, cout),
+        "bn3": L.batchnorm_init(cout, zero_gamma=True),
+    }
+    if cin != cout:
+        p["proj"] = L.conv_init(k[3], 1, 1, cin, cout)
+        p["bn_proj"] = L.batchnorm_init(cout)
+    return p
+
+
+def init(key, cfg: ResNetConfig):
+    keys = jax.random.split(key, 2 + len(cfg.stage_sizes) * max(cfg.stage_sizes))
+    params = {
+        "stem": {"conv": L.conv_init(keys[0], 7, 7, 3, cfg.width),
+                 "bn": L.batchnorm_init(cfg.width)},
+        "stages": [],
+    }
+    cin = cfg.width
+    ki = 1
+    for s, nblocks in enumerate(cfg.stage_sizes):
+        inner = cfg.width * (2 ** s)
+        cout = inner * 4
+        blocks = []
+        for b in range(nblocks):
+            blocks.append(_bottleneck_init(keys[ki], cin, inner, cout))
+            ki += 1
+            cin = cout
+        params["stages"].append(blocks)
+    params["head"] = L.dense_init(keys[-1], cin, cfg.num_classes)
+    return params
+
+
+def _bottleneck(p, x, stride, *, dp_axes, stats, collect):
+    sts = {}
+
+    def bn(name, h, zero_ok=False):
+        st = None if stats is None else stats[name]
+        out = L.batchnorm(p[name], h, stats=st, dp_axes=dp_axes,
+                          return_stats=collect)
+        if collect:
+            out, s = out
+            sts[name] = s
+        return out
+
+    h = jax.nn.relu(bn("bn1", L.conv(p["conv1"], x, 1)))
+    h = jax.nn.relu(bn("bn2", L.conv(p["conv2"], h, stride)))   # v1.5 stride
+    h = bn("bn3", L.conv(p["conv3"], h, 1))
+    if "proj" in p:
+        sc = bn("bn_proj", L.conv(p["proj"], x, stride))
+    else:
+        sc = x
+    out = jax.nn.relu(h + sc)
+    return (out, sts) if collect else out
+
+
+def apply(params, images, cfg: ResNetConfig, *, dp_axes=(), stats=None,
+          collect_stats=False):
+    """images: (B, H, W, 3) in [0, 1]-ish normalized floats.
+
+    ``stats``: pytree of per-BN (mean, var) for eval; ``collect_stats``
+    returns (logits, stats_pytree) -- the calibration pass of
+    "BN without moving average".
+    """
+    p = L.cast(params, cfg.compute_dtype)
+    x = images.astype(cfg.compute_dtype)
+    all_stats = {"stem": {}, "stages": []}
+
+    st = None if stats is None else stats["stem"].get("bn")
+    h = L.conv(p["stem"]["conv"], x, 2)
+    out = L.batchnorm(p["stem"]["bn"], h, stats=st, dp_axes=dp_axes,
+                      return_stats=collect_stats)
+    if collect_stats:
+        out, s = out
+        all_stats["stem"]["bn"] = s
+    h = jax.nn.relu(out)
+    h = L.max_pool(h, 3, 2)
+
+    for si, blocks in enumerate(p["stages"]):
+        stage_stats = []
+        for bi, bp in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            bst = None if stats is None else stats["stages"][si][bi]
+            out = _bottleneck(bp, h, stride, dp_axes=dp_axes, stats=bst,
+                              collect=collect_stats)
+            if collect_stats:
+                h, s = out
+                stage_stats.append(s)
+            else:
+                h = out
+        all_stats["stages"].append(stage_stats)
+
+    h = L.global_avg_pool(h).astype(jnp.float32)
+    logits = L.dense(L.cast(params["head"], jnp.float32), h)
+    if collect_stats:
+        return logits, all_stats
+    return logits
+
+
+def num_params(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

@@ -1,0 +1,502 @@
+"""Unified decoder stack covering all assigned architectures.
+
+A model is a cycled ``pattern`` of layer kinds over ``n_layers``:
+
+    attn   -- global causal self-attention (GQA/MQA/MHA)
+    local  -- sliding-window self-attention (window = cfg.window)
+    cross  -- cross-attention to vision/audio embeddings (VLM)
+    ssd    -- Mamba-2 state-space block (no separate MLP when mlp='none')
+    rglru  -- RG-LRU recurrent block (RecurrentGemma)
+
+Layers whose index falls in the repeated region are *scanned*
+(``lax.scan`` over stacked params) so the HLO stays compact for 126-layer
+models; ``n_layers % len(pattern)`` leading layers plus ``first_dense``
+MoE-exempt layers form an unscanned prefix.
+
+Three entry points:
+    forward(params, tokens, ...)                 -> logits            (train)
+    prefill(params, tokens, ...)                 -> (last_logits, cache)
+    decode_step(params, token, cache, index,...) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import rglru as R
+from repro.nn import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                       # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[str, ...] = ("attn",)
+    mlp: str = "dense"                   # dense | moe | none
+    n_experts: int = 0
+    top_k: int = 0
+    first_dense: int = 0                 # leading layers forced dense-MLP
+    act: str = "silu"
+    gated_mlp: bool = True               # False: plain 2-matrix FFN (musicgen)
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    qk_norm: bool = False
+    post_norm: bool = False              # gemma2 post-block norms
+    logit_softcap: float | None = None
+    attn_softcap: float | None = None
+    window: int | None = None
+    rope_theta: float = 10000.0
+    embed_scale: bool = False            # gemma: embeds * sqrt(d)
+    tie_embeddings: bool = True
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_unroll: bool = False
+    moe_capacity_factor: float = 1.25
+    q_chunk: int = 1024                  # 0 = unchunked attention
+    q_chunk_unroll: bool = False
+    cross_kv_dim: int | None = None
+    vision_tokens: int = 0
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = False
+    scan_blocks: bool = True             # False: unroll all layers (cost
+                                         # analysis; XLA excludes while-loop
+                                         # bodies from cost_analysis)
+    # citation / provenance
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(self.pattern[i % len(self.pattern)]
+                     for i in range(self.n_layers))
+
+    @property
+    def n_prefix(self) -> int:
+        if not self.scan_blocks:
+            return self.n_layers
+        rest = self.n_layers - self.first_dense
+        return self.first_dense + rest % len(self.pattern)
+
+    @property
+    def n_blocks(self) -> int:
+        return (self.n_layers - self.n_prefix) // len(self.pattern)
+
+    def attn_cfg(self, kind: str) -> A.AttnConfig:
+        return A.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, qk_norm=self.qk_norm,
+            attn_softcap=self.attn_softcap,
+            window=self.window if kind == "local" else None,
+            cross_kv_dim=self.cross_kv_dim if kind == "cross" else None,
+            query_scale=self.head_dim ** -0.5)
+
+    def ssd_cfg(self) -> S.SSDConfig:
+        return S.SSDConfig(d_model=self.d_model, d_state=self.ssm_state,
+                           head_dim=self.ssm_head_dim, chunk=self.ssm_chunk,
+                           unroll_scan=self.ssm_unroll)
+
+    def rglru_cfg(self) -> R.RGLRUConfig:
+        return R.RGLRUConfig(d_model=self.d_model)
+
+    def moe_cfg(self) -> M.MoEConfig:
+        return M.MoEConfig(d_model=self.d_model, d_ff=self.d_ff,
+                           n_experts=self.n_experts, top_k=self.top_k,
+                           capacity_factor=self.moe_capacity_factor,
+                           act=self.act)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (no allocation)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        total = v * d                                     # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        per_kind = {}
+        o = self.n_heads * self.head_dim * d
+        per_kind["attn"] = per_kind["local"] = d * self.n_heads * self.head_dim \
+            + 2 * d * self.n_kv_heads * self.head_dim + o
+        per_kind["cross"] = d * self.n_heads * self.head_dim + 2 * (
+            (self.cross_kv_dim or d) * self.n_kv_heads * self.head_dim) + o
+        sc = self.ssd_cfg()
+        per_kind["ssd"] = d * (2 * sc.d_inner + 2 * sc.d_state + sc.n_heads) \
+            + sc.d_inner * d
+        per_kind["rglru"] = 5 * d * d                     # in x2, gates x2, out
+        n_mats = 3 if self.gated_mlp else 2
+        mlp_dense = n_mats * d * f
+        mlp_moe = self.n_experts * 3 * d * f + d * self.n_experts
+        mlp_moe_dense = 3 * d * f * max(self.top_k, 1)    # first_dense layers
+        for i, k in enumerate(self.kinds()):
+            total += per_kind[k]
+            if self.mlp == "none":
+                continue
+            if self.mlp == "moe":
+                total += mlp_moe if i >= self.first_dense else mlp_moe_dense
+            else:
+                total += mlp_dense
+        return total
+
+    def active_params(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6*N_active*D)."""
+        if self.mlp != "moe":
+            return self.num_params()
+        d, f = self.d_model, self.d_ff
+        full = self.num_params()
+        inactive = (self.n_experts - self.top_k) * 3 * d * f * (
+            self.n_layers - self.first_dense)
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, dim=None):
+    dim = dim or cfg.d_model
+    return (L.rmsnorm_init(dim) if cfg.norm == "rmsnorm"
+            else L.layernorm_init(dim))
+
+
+def _norm(cfg, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+def _layer_init(key, cfg: ArchConfig, kind: str, layer_idx: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"pre_norm": _norm_init(cfg)}
+    if kind in ("attn", "local", "cross"):
+        p["mixer"] = A.attn_init(k1, cfg.attn_cfg(kind))
+    elif kind == "ssd":
+        p["mixer"] = S.ssd_init(k1, cfg.ssd_cfg())
+    elif kind == "rglru":
+        p["mixer"] = R.rglru_init(k1, cfg.rglru_cfg())
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        p["post_mixer_norm"] = _norm_init(cfg)
+    if cfg.mlp != "none":
+        p["mlp_norm"] = _norm_init(cfg)
+        if cfg.mlp == "moe" and layer_idx >= cfg.first_dense:
+            p["mlp"] = M.moe_init(k2, cfg.moe_cfg())
+        else:
+            # dense layers in MoE models use the arch's dense d_ff heuristic:
+            # experts' f * top_k to keep activated compute comparable
+            f = cfg.d_ff if cfg.mlp != "moe" else cfg.d_ff * max(cfg.top_k, 1)
+            p["mlp"] = L.mlp_init(k2, cfg.d_model, f, gated=cfg.gated_mlp,
+                                  act=cfg.act)
+        if cfg.post_norm:
+            p["post_mlp_norm"] = _norm_init(cfg)
+    return p
+
+
+def init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    kinds = cfg.kinds()
+    params = {
+        "embed": L.embedding_init(keys[0], cfg.vocab, cfg.d_model),
+        "final_norm": _norm_init(cfg),
+        "prefix": [
+            _layer_init(keys[1 + i], cfg, kinds[i], i)
+            for i in range(cfg.n_prefix)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"kernel": jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab), jnp.float32) * 0.02}
+    if cfg.n_blocks > 0:
+        base = cfg.n_prefix
+
+        def one_block(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return [
+                _layer_init(ks[j], cfg, kinds[base + j], base + j)
+                for j in range(len(cfg.pattern))
+            ]
+        block_keys = jax.random.split(keys[-2], cfg.n_blocks)
+        params["blocks"] = jax.vmap(one_block)(block_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, x, cfg: ArchConfig, kind: str, *, vision=None):
+    """Full-seq layer. Returns (x, aux)."""
+    h = _norm(cfg, p["pre_norm"], x)
+    if kind in ("attn", "local"):
+        h = A.self_attention(p["mixer"], h, cfg.attn_cfg(kind),
+                             q_chunk=cfg.q_chunk, unroll=cfg.q_chunk_unroll)
+    elif kind == "cross":
+        h = A.cross_attention(p["mixer"], h, vision, cfg.attn_cfg(kind))
+    elif kind == "ssd":
+        h = S.ssd_apply(p["mixer"], h, cfg.ssd_cfg())
+    elif kind == "rglru":
+        h = R.rglru_apply(p["mixer"], h, cfg.rglru_cfg())
+    if cfg.post_norm:
+        h = _norm(cfg, p["post_mixer_norm"], h)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.mlp != "none":
+        h = _norm(cfg, p["mlp_norm"], x)
+        if "router" in p["mlp"]:
+            h, aux = M.moe_apply(p["mlp"], h, cfg.moe_cfg())
+        else:
+            h = L.mlp(p["mlp"], h, act=cfg.act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["post_mlp_norm"], h)
+        x = x + h
+    return x, aux
+
+
+def _embed_in(params, cfg, tokens):
+    x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return x
+
+
+def _logits_out(params, cfg, x):
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = x @ params["unembed"]["kernel"].astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(params, tokens, cfg: ArchConfig, *, vision=None):
+    """tokens: (B, S) int32 -> logits (B, S, V) fp32. aux: scalar MoE loss."""
+    x = _embed_in(params, cfg, tokens)
+    kinds = cfg.kinds()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    prefix_layer = (jax.checkpoint(_apply_layer, static_argnums=(2, 3))
+                    if cfg.remat else _apply_layer)
+    for i, p in enumerate(params["prefix"]):
+        x, aux = prefix_layer(p, x, cfg, kinds[i], vision=vision)
+        aux_total += aux
+
+    if cfg.n_blocks > 0:
+        base = cfg.n_prefix
+        block_kinds = kinds[base: base + len(cfg.pattern)]
+
+        def body(carry, bp):
+            x, aux_acc = carry
+            for j, kind in enumerate(block_kinds):
+                x, aux = _apply_layer(bp[j], x, cfg, kind, vision=vision)
+                aux_acc = aux_acc + aux
+            return (x, aux_acc), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = lax.scan(body, (x, aux_total), params["blocks"])
+
+    return _logits_out(params, cfg, x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ArchConfig, kind: str, batch: int, cache_len: int,
+                 dtype=jnp.bfloat16):
+    if kind in ("attn", "cross"):
+        return A.init_kv_cache(batch, cache_len, cfg.attn_cfg(kind), dtype)
+    if kind == "local":
+        return A.init_kv_cache(batch, min(cfg.window, cache_len),
+                               cfg.attn_cfg(kind), dtype)
+    if kind == "ssd":
+        return S.ssd_init_state(batch, cfg.ssd_cfg(), dtype)
+    if kind == "rglru":
+        return R.rglru_init_state(batch, cfg.rglru_cfg(), dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    kinds = cfg.kinds()
+    cache = {"prefix": [
+        _layer_cache(cfg, kinds[i], batch, cache_len, dtype)
+        for i in range(cfg.n_prefix)
+    ]}
+    if cfg.n_blocks > 0:
+        base = cfg.n_prefix
+        one = [
+            _layer_cache(cfg, kinds[base + j], batch, cache_len, dtype)
+            for j in range(len(cfg.pattern))
+        ]
+        cache["blocks"] = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_blocks,) + l.shape), one)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _decode_layer(p, x, c, index, cfg: ArchConfig, kind: str):
+    h = _norm(cfg, p["pre_norm"], x)
+    if kind in ("attn", "local"):
+        h, c = A.decode_self_attention(p["mixer"], h, c, index,
+                                       cfg.attn_cfg(kind))
+    elif kind == "cross":
+        # decode-time cross-attn reads the prefilled vision KV cache
+        h, c = _decode_cross(p["mixer"], h, c, cfg.attn_cfg(kind))
+    elif kind == "ssd":
+        h, c = S.ssd_decode_step(p["mixer"], h, c, cfg.ssd_cfg())
+    elif kind == "rglru":
+        h, c = R.rglru_decode_step(p["mixer"], h, c, cfg.rglru_cfg())
+    if cfg.post_norm:
+        h = _norm(cfg, p["post_mixer_norm"], h)
+    x = x + h
+    if cfg.mlp != "none":
+        h = _norm(cfg, p["mlp_norm"], x)
+        if "router" in p["mlp"]:
+            h, _ = M.moe_apply(p["mlp"], h, cfg.moe_cfg())
+        else:
+            h = L.mlp(p["mlp"], h, act=cfg.act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["post_mlp_norm"], h)
+        x = x + h
+    return x, c
+
+
+def _decode_cross(p, x, cache, acfg: A.AttnConfig):
+    """Cross-attention during decode: static K/V from the vision cache."""
+    B = x.shape[0]
+    q = (x @ p["q"]["kernel"].astype(x.dtype)).reshape(
+        B, 1, acfg.n_heads, acfg.head_dim)
+    if acfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+    mask = jnp.ones((B, 1, cache["k"].shape[1]), bool)
+    out = A._sdpa(q, cache["k"].astype(x.dtype), cache["v"].astype(x.dtype),
+                  mask, acfg)
+    return out @ p["o"]["kernel"].astype(x.dtype), cache
+
+
+def decode_step(params, token, cache, index, cfg: ArchConfig):
+    """token: (B, 1) int32; index: scalar int32 absolute position.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = _embed_in(params, cfg, token)
+    kinds = cfg.kinds()
+
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        x, c = _decode_layer(p, x, cache["prefix"][i], index, cfg, kinds[i])
+        new_prefix.append(c)
+    new_cache = {"prefix": new_prefix}
+
+    if cfg.n_blocks > 0:
+        base = cfg.n_prefix
+        block_kinds = kinds[base: base + len(cfg.pattern)]
+
+        def body(x, blk):
+            bp, bc = blk
+            new_c = []
+            for j, kind in enumerate(block_kinds):
+                x, cj = _decode_layer(bp[j], x, bc[j], index, cfg, kind)
+                new_c.append(cj)
+            return x, new_c
+
+        x, new_blocks = lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+
+    return _logits_out(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(p, x, index_len, cache_len, cfg: ArchConfig, kind: str,
+                   vision=None, dtype=jnp.bfloat16):
+    h = _norm(cfg, p["pre_norm"], x)
+    if kind in ("attn", "local"):
+        acfg = cfg.attn_cfg(kind)
+        clen = cache_len if kind == "attn" else min(cfg.window, cache_len)
+        c = A.prefill_kv_cache(p["mixer"], h, acfg, clen, dtype=dtype)
+        h = A.self_attention(p["mixer"], h, acfg, q_chunk=cfg.q_chunk,
+                             unroll=cfg.q_chunk_unroll)
+    elif kind == "cross":
+        acfg = cfg.attn_cfg(kind)
+        kv = vision.astype(x.dtype)
+        k = (kv @ p["mixer"]["k"]["kernel"].astype(x.dtype)).reshape(
+            kv.shape[0], -1, acfg.n_kv_heads, acfg.head_dim)
+        v = (kv @ p["mixer"]["v"]["kernel"].astype(x.dtype)).reshape(
+            kv.shape[0], -1, acfg.n_kv_heads, acfg.head_dim)
+        if acfg.qk_norm:
+            k = L.rmsnorm(p["mixer"]["k_norm"], k)
+        c = {"k": k.astype(dtype), "v": v.astype(dtype)}
+        h = A.cross_attention(p["mixer"], h, vision, acfg)
+    elif kind == "ssd":
+        h, c = S.ssd_apply(p["mixer"], h, cfg.ssd_cfg(), return_state=True)
+    elif kind == "rglru":
+        h, c = R.rglru_apply(p["mixer"], h, cfg.rglru_cfg(), return_state=True)
+    if cfg.post_norm:
+        h = _norm(cfg, p["post_mixer_norm"], h)
+    x = x + h
+    if cfg.mlp != "none":
+        h = _norm(cfg, p["mlp_norm"], x)
+        if "router" in p["mlp"]:
+            h, _ = M.moe_apply(p["mlp"], h, cfg.moe_cfg())
+        else:
+            h = L.mlp(p["mlp"], h, act=cfg.act)
+        if cfg.post_norm:
+            h = _norm(cfg, p["post_mlp_norm"], h)
+        x = x + h
+    return x, c
+
+
+def prefill(params, tokens, cfg: ArchConfig, *, vision=None, cache_len=None,
+            cache_dtype=jnp.bfloat16):
+    """Process the prompt, return (last-position logits, cache)."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = _embed_in(params, cfg, tokens)
+    kinds = cfg.kinds()
+
+    new_prefix = []
+    for i, p in enumerate(params["prefix"]):
+        x, c = _prefill_layer(p, x, S, cache_len, cfg, kinds[i],
+                              vision=vision, dtype=cache_dtype)
+        new_prefix.append(c)
+    cache = {"prefix": new_prefix}
+
+    if cfg.n_blocks > 0:
+        base = cfg.n_prefix
+        block_kinds = kinds[base: base + len(cfg.pattern)]
+
+        def body(x, bp):
+            cs = []
+            for j, kind in enumerate(block_kinds):
+                x, c = _prefill_layer(bp[j], x, S, cache_len, cfg, kind,
+                                      vision=vision, dtype=cache_dtype)
+                cs.append(c)
+            return x, cs
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, blocks_cache = lax.scan(body, x, params["blocks"])
+        cache["blocks"] = blocks_cache
+
+    logits = _logits_out(params, cfg, x[:, -1:])
+    return logits, cache

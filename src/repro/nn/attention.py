@@ -1,0 +1,235 @@
+"""Attention: GQA/MQA/MHA, RoPE, qk-norm, logit softcap, sliding window,
+cross-attention, and cached decode. Covers the attention variants of all
+assigned architectures (gemma/gemma2/llama/qwen/musicgen/recurrentgemma
+local-attn/llama-vision cross-attn).
+
+Decode uses a KV cache; *local* (sliding-window) layers use a rolling
+cache of ``window`` slots so a 500k-token context costs O(window) memory
+per layer -- the mechanism that lets dense archs run the ``long_500k``
+shape (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import init as winit
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float | None = None       # gemma2: 50.0
+    window: int | None = None               # sliding-window size (local attn)
+    query_scale: float | None = None        # default 1/sqrt(head_dim)
+    cross_kv_dim: int | None = None         # cross-attn source dim (VLM)
+
+
+# ------------------------------------------------------------------ RoPE --
+
+def rope(x, positions, theta):
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions: (B, S) -> (B, S, 1, half)
+    ang = positions[..., None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype)
+    y2 = x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype)
+    return jnp.concatenate([y1, y2], axis=-1)
+
+
+# ------------------------------------------------------------------ init --
+
+def attn_init(key, cfg: AttnConfig):
+    k = jax.random.split(key, 6)
+    hd, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    kv_in = cfg.cross_kv_dim or cfg.d_model
+    p = {
+        "q": {"kernel": winit.lecun_normal(k[0], (cfg.d_model, h * hd))},
+        "k": {"kernel": winit.lecun_normal(k[1], (kv_in, hkv * hd))},
+        "v": {"kernel": winit.lecun_normal(k[2], (kv_in, hkv * hd))},
+        "o": {"kernel": winit.lecun_normal(k[3], (h * hd, cfg.d_model))},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd)
+        p["k_norm"] = L.rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(p, x, kv_src, cfg: AttnConfig, positions, kv_positions,
+                 use_rope=True):
+    B = x.shape[0]
+    q = (x @ p["q"]["kernel"].astype(x.dtype)).reshape(
+        B, -1, cfg.n_heads, cfg.head_dim)
+    kv = kv_src.astype(x.dtype)
+    k = (kv @ p["k"]["kernel"].astype(x.dtype)).reshape(
+        B, -1, cfg.n_kv_heads, cfg.head_dim)
+    v = (kv @ p["v"]["kernel"].astype(x.dtype)).reshape(
+        B, -1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D); GQA via head grouping."""
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    groups = cfg.n_heads // cfg.n_kv_heads
+    B, Sq, H, D = q.shape
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, groups, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k)
+    if cfg.attn_softcap:
+        c = cfg.attn_softcap
+        logits = c * jnp.tanh(logits / c)
+    logits = jnp.where(mask[:, None, None, :, :], logits.astype(jnp.float32),
+                       -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H * D)
+
+
+def causal_mask(sq, skv, q_offset=0, window=None):
+    """(sq, skv) bool mask; True = attend. q position i attends kv j iff
+    j <= i+offset and (no window or j > i+offset-window)."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def _sdpa_q_chunked(q, k, v, cfg: AttnConfig, q_chunk: int,
+                    unroll: bool = False):
+    """Memory-bounded attention: scan over query chunks so the logits
+    tensor is (B, H, q_chunk, S) instead of (B, H, S, S). The 32k prefill
+    shapes are unloggable without this (flash-attention-style bounding; the
+    softmax itself is still exact per chunk since the full key row fits).
+    ``unroll`` replaces the lax.scan with a python loop -- used by the cost
+    extrapolation because XLA cost_analysis excludes while-loop bodies."""
+    B, S, H, D = q.shape
+    nc = S // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, D), 1, 0)
+
+    def body(_, args):
+        qi, idx = args
+        offset = idx * q_chunk
+        kj = jnp.arange(S)[None, :]
+        qi_pos = jnp.arange(q_chunk)[:, None] + offset
+        m = kj <= qi_pos
+        if cfg.window is not None:
+            m = m & (kj > qi_pos - cfg.window)
+        out = _sdpa(qi, k, v, m[None], cfg)
+        return None, out
+
+    if unroll:
+        outs = jnp.stack([body(None, (qc[i], jnp.asarray(i)))[1]
+                          for i in range(nc)])
+    else:
+        _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H * D)
+
+
+# --------------------------------------------------------------- forward --
+
+def self_attention(p, x, cfg: AttnConfig, positions=None, use_rope=True,
+                   q_chunk: int = 1024, unroll: bool = False):
+    """Full-sequence (training / prefill) self-attention. Sequences longer
+    than 2*q_chunk use the query-chunked memory-bounded path."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions, use_rope)
+    if q_chunk and S > 2 * q_chunk and S % q_chunk == 0:
+        out = _sdpa_q_chunked(q, k, v, cfg, q_chunk, unroll)
+    else:
+        mask = causal_mask(S, S, 0, cfg.window)[None]
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["o"]["kernel"].astype(x.dtype)
+
+
+def cross_attention(p, x, kv_src, cfg: AttnConfig):
+    """Cross-attention (VLM): queries from text stream, k/v from vision
+    embeddings; no causal mask, no rope on kv."""
+    B, S, _ = x.shape
+    Skv = kv_src.shape[1]
+    pos = jnp.zeros((B, S), jnp.int32)
+    q, k, v = _project_qkv(p, x, kv_src, cfg, pos, pos[:, :Skv] if Skv <= S
+                           else jnp.zeros((B, Skv), jnp.int32), use_rope=False)
+    mask = jnp.ones((1, S, Skv), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["o"]["kernel"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- decode --
+
+def init_kv_cache(batch, cache_len, cfg: AttnConfig, dtype=jnp.bfloat16):
+    """cache_len: full seq for global layers, ``window`` for local layers."""
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_self_attention(p, x, cache, index, cfg: AttnConfig, use_rope=True):
+    """One-token decode. x: (B, 1, d). ``index``: absolute position of the
+    new token. Local layers use a rolling buffer: slot = index % cache_len.
+    Returns (out, new_cache)."""
+    B = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, positions, positions, use_rope)
+    slot = index % cache_len if cfg.window is not None else index
+    k = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    kv_pos = jnp.arange(cache_len)[None, :]
+    if cfg.window is not None:
+        # rolling buffer: absolute position of slot s
+        wrap = (index // cache_len) * cache_len
+        abs_pos = jnp.where(kv_pos <= slot, wrap + kv_pos, wrap - cache_len + kv_pos)
+        valid = (abs_pos <= index) & (abs_pos > index - min(cfg.window, cache_len)) & (abs_pos >= 0)
+        mask = jnp.broadcast_to(valid, (B, cache_len))[:, None, :]
+    else:
+        valid = kv_pos <= index
+        mask = jnp.broadcast_to(valid, (B, cache_len))[:, None, :]
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out @ p["o"]["kernel"].astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def prefill_kv_cache(p, x, cfg: AttnConfig, cache_len, use_rope=True,
+                     dtype=jnp.bfloat16):
+    """Run projections over the prompt and build the cache (last
+    ``cache_len`` positions for local layers)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    _, k, v = _project_qkv(p, x, x, cfg, positions, positions, use_rope)
+    if cache_len >= S:
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        # rolling buffer layout: slot = pos % cache_len
+        start = S - cache_len
+        k, v = k[:, start:], v[:, start:]
+        shift = start % cache_len
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}

@@ -1,0 +1,37 @@
+"""Parameter initializers (paper §3.2: 'All layers in the model are
+initialized by the values described in [10]' -- He-style fan-in normal for
+convs, zeros for the last BN gamma of each residual block)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def he_normal(key, shape, fan_in=None, dtype=jnp.float32):
+    if fan_in is None:
+        fan_in = int(np.prod(shape[:-1]))
+    std = float(np.sqrt(2.0 / max(fan_in, 1)))
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def lecun_normal(key, shape, fan_in=None, dtype=jnp.float32):
+    if fan_in is None:
+        fan_in = int(np.prod(shape[:-1]))
+    std = float(np.sqrt(1.0 / max(fan_in, 1)))
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

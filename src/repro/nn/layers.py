@@ -1,0 +1,174 @@
+"""Functional NN layers: param-pytree based (no flax; MaxText-style).
+
+Every layer is a pair of module-level functions
+    <layer>_init(key, ...) -> params
+    <layer>(params, x, ...) -> y
+Parameters are stored fp32 (master copy); ``cast`` at apply time implements
+the mixed-precision policy (paper §3.2: fwd/bwd in half precision, BN and
+LARS statistics in fp32).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import init as winit
+
+
+def cast(params, dtype):
+    """Compute-dtype view of the fp32 master params."""
+    return jax.tree.map(lambda p: p.astype(dtype) if p.dtype == jnp.float32 else p,
+                        params)
+
+
+# ------------------------------------------------------------------ dense --
+
+def dense_init(key, in_dim, out_dim, use_bias=True, initializer=winit.he_normal):
+    kk, _ = jax.random.split(key)
+    p = {"kernel": initializer(kk, (in_dim, out_dim), fan_in=in_dim)}
+    if use_bias:
+        p["bias"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- conv --
+
+def conv_init(key, kh, kw, cin, cout):
+    return {"kernel": winit.he_normal(key, (kh, kw, cin, cout),
+                                      fan_in=kh * kw * cin)}
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    """NHWC conv."""
+    s = (stride, stride) if isinstance(stride, int) else stride
+    return lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), window_strides=s, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ------------------------------------------------------------- batch norm --
+
+def batchnorm_init(dim, zero_gamma=False):
+    return {
+        "bn_scale": jnp.zeros((dim,), jnp.float32) if zero_gamma
+        else jnp.ones((dim,), jnp.float32),
+        "bn_bias": jnp.zeros((dim,), jnp.float32),
+    }
+
+
+def batchnorm(p, x, *, stats=None, dp_axes=(), eps=1e-5, return_stats=False):
+    """BN "without moving average" (paper §3.2 / Akiba et al. [5]).
+
+    Train: statistics are the *synchronized batch* mean/variance -- reduced
+    across the data-parallel axes in FP32 ("communication to synchronize
+    batch mean and batch squared mean was conducted in FP32"). No EMA is
+    kept; evaluation uses ``stats`` computed by a calibration pass.
+    """
+    axes = tuple(range(x.ndim - 1))
+    if stats is not None:                      # eval path
+        mean, var = stats
+    else:
+        xf = x.astype(jnp.float32)
+        mean = xf.mean(axes)
+        sq = (xf * xf).mean(axes)
+        if dp_axes:
+            # fp32 cross-replica sync of mean and squared mean
+            mean = lax.pmean(mean, dp_axes)
+            sq = lax.pmean(sq, dp_axes)
+        var = sq - mean * mean
+    inv = lax.rsqrt(var + eps) * p["bn_scale"]
+    y = (x.astype(jnp.float32) - mean) * inv + p["bn_bias"]
+    y = y.astype(x.dtype)
+    if return_stats:
+        return y, (mean, var)
+    return y
+
+
+# ------------------------------------------------------- layer/rms norms --
+
+def layernorm_init(dim):
+    return {"norm_scale": jnp.ones((dim,), jnp.float32),
+            "norm_bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps) * p["norm_scale"] + p["norm_bias"]
+    return y.astype(x.dtype)
+
+
+def rmsnorm_init(dim):
+    return {"norm_scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    """Gemma-style: scale stored as (1 + w), zero-init."""
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * (1.0 + p["norm_scale"])).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embedding --
+
+def embedding_init(key, vocab, dim):
+    return {"embedding": winit.normal(key, (vocab, dim), std=0.02)}
+
+
+def embed(p, ids, dtype=jnp.bfloat16):
+    return p["embedding"].astype(dtype)[ids]
+
+
+def unembed(p, x):
+    return x @ p["embedding"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------- pooling --
+
+def max_pool(x, window=3, stride=2, padding="SAME"):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, window, window, 1), (1, stride, stride, 1),
+        padding)
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(1, 2))
+
+
+# ----------------------------------------------------------------- MLPs ---
+
+def mlp_init(key, d_model, d_ff, gated=True, act="gelu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d_model, d_ff, use_bias=False,
+                          initializer=winit.lecun_normal),
+         "down": dense_init(k2, d_ff, d_model, use_bias=False,
+                            initializer=winit.lecun_normal)}
+    if gated:
+        p["gate"] = dense_init(k3, d_model, d_ff, use_bias=False,
+                               initializer=winit.lecun_normal)
+    return p
+
+
+_ACTS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu,
+         "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def mlp(p, x, act="gelu"):
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = h * _ACTS[act](dense(p["gate"], x))
+    else:
+        h = _ACTS[act](h)
+    return dense(p["down"], h)

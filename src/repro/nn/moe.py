@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Used by granite-moe (40e top-8) and kimi-k2 (384e top-8). Design notes:
+
+* Expert weights are stacked ``(E, d, f)`` and sharded over the ``model``
+  mesh axis (expert parallelism): the per-expert einsum shards cleanly.
+* Dispatch is sort-based with a fixed per-expert capacity
+  ``C = ceil(T * k / E * capacity_factor)`` -- shape-static (jit-safe),
+  drops overflow tokens (standard GShard/Switch semantics) and avoids the
+  O(T*E*C) one-hot dispatch tensor that would dominate HBM.
+* An auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as winit
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_dtype: object = jnp.float32
+
+
+def moe_init(key, cfg: MoEConfig):
+    k = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": {"kernel": winit.normal(k[0], (d, E), std=0.02)},
+        "experts": {
+            "up": winit.lecun_normal(k[1], (E, d, f), fan_in=d),
+            "gate": winit.lecun_normal(k[2], (E, d, f), fan_in=d),
+            "down": winit.lecun_normal(k[3], (E, f, d), fan_in=f),
+        },
+    }
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def moe_apply(p, x, cfg: MoEConfig):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(T * k / E * cfg.capacity_factor))
+    xt = x.reshape(T, d)
+
+    # --- route (fp32: router logits need dynamic range) ---
+    logits = (xt.astype(cfg.router_dtype)
+              @ p["router"]["kernel"].astype(cfg.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, topk_e = jax.lax.top_k(probs, k)                # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux loss (Switch) ---
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros((E,), probs.dtype).at[topk_e.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch with fixed capacity ---
+    flat_e = topk_e.reshape(T * k)                              # expert per slot
+    tok_of_slot = jnp.repeat(jnp.arange(T), k)
+    gate_of_slot = gate_vals.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_tok, s_gate = flat_e[order], tok_of_slot[order], gate_of_slot[order]
+    # rank within the expert's contiguous group
+    pos = jnp.arange(T * k) - jnp.searchsorted(se, se, side="left")
+    keep = pos < cap
+    slot_buf = jnp.full((E, cap), T, jnp.int32)                 # T = pad row
+    gate_buf = jnp.zeros((E, cap), x.dtype)
+    se_k = jnp.where(keep, se, E)                               # drop -> OOB
+    slot_buf = slot_buf.at[se_k, pos].set(st_tok.astype(jnp.int32), mode="drop")
+    gate_buf = gate_buf.at[se_k, pos].set(s_gate.astype(x.dtype), mode="drop")
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], 0)
+    xe = xpad[slot_buf]                                         # (E, cap, d)
+
+    # --- expert FFN (einsum shards over E on the model axis) ---
+    w = p["experts"]
+    act = _ACTS[cfg.act]
+    h = jnp.einsum("ecd,edf->ecf", xe, w["up"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", xe, w["gate"].astype(x.dtype))
+    h = h * act(g)
+    ye = jnp.einsum("ecf,efd->ecd", h, w["down"].astype(x.dtype))
+    ye = ye * gate_buf[..., None]
+
+    # --- combine ---
+    y = jnp.zeros((T + 1, d), x.dtype)
+    y = y.at[slot_buf.reshape(-1)].add(ye.reshape(-1, d))
+    return y[:T].reshape(B, S, d), aux

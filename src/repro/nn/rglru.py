@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = linear-in -> temporal conv1d (width 4) -> RG-LRU -> gated linear-out.
+The RG-LRU recurrence per channel:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a^(c * r_t)         with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill run the recurrence with ``lax.associative_scan``
+(log-depth); decode is the O(1) per-token update. State per layer:
+(B, d_rnn) hidden + (B, W-1, d_rnn) conv tail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import init as winit
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int | None = None          # default d_model
+    conv_width: int = 4
+    c: float = 8.0
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def rglru_init(key, cfg: RGLRUConfig):
+    k = jax.random.split(key, 7)
+    d, w = cfg.d_model, cfg.width
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+    u = jax.random.uniform(k[3], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "in_x": {"kernel": winit.lecun_normal(k[0], (d, w))},
+        "in_gate": {"kernel": winit.lecun_normal(k[1], (d, w))},
+        "conv": {"kernel": winit.lecun_normal(k[2], (cfg.conv_width, w),
+                                              fan_in=cfg.conv_width)},
+        "rg_kernel": winit.normal(k[4], (w, w), std=w ** -0.5),
+        "rg_bias": jnp.zeros((w,), jnp.float32),
+        "ig_kernel": winit.normal(k[5], (w, w), std=w ** -0.5),
+        "ig_bias": jnp.zeros((w,), jnp.float32),
+        "lambda_param": lam,
+        "out": {"kernel": winit.lecun_normal(k[6], (w, d))},
+    }
+
+
+def _conv1d(p, x, state=None):
+    w = p["conv"]["kernel"].astype(x.dtype)
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):]
+
+
+def _gates(p, x, cfg: RGLRUConfig):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["rg_kernel"] + p["rg_bias"])
+    i = jax.nn.sigmoid(xf @ p["ig_kernel"] + p["ig_bias"])
+    log_a = cfg.c * r * jax.nn.log_sigmoid(p["lambda_param"])   # a = sigmoid(L)^(c*r)
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+    return a, beta * gated_x
+
+
+def rglru_apply(p, u, cfg: RGLRUConfig, state=None, return_state=False):
+    """u: (B, S, d_model)."""
+    x = u @ p["in_x"]["kernel"].astype(u.dtype)
+    gate = jax.nn.gelu(u @ p["in_gate"]["kernel"].astype(u.dtype))
+    conv_state = None if state is None else state["conv"]
+    x, new_conv = _conv1d(p, x, conv_state)
+    a, bx = _gates(p, x, cfg)                                   # (B,S,w) fp32
+
+    # h_t = a_t h_{t-1} + bx_t  via associative scan on (a, bx)
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if state is not None:
+        # prepend carried hidden as step 0
+        h0 = state["hidden"].astype(jnp.float32)[:, None]
+        a = jnp.concatenate([jnp.ones_like(h0), a], axis=1)
+        bx = jnp.concatenate([h0, bx], axis=1)
+        _, h = lax.associative_scan(combine, (a, bx), axis=1)
+        h = h[:, 1:]
+    else:
+        _, h = lax.associative_scan(combine, (a, bx), axis=1)
+
+    y = (h.astype(u.dtype) * gate) @ p["out"]["kernel"].astype(u.dtype)
+    if return_state:
+        return y, {"hidden": h[:, -1], "conv": new_conv}
+    return y
+
+
+def rglru_init_state(batch, cfg: RGLRUConfig, dtype=jnp.bfloat16):
+    return {"hidden": jnp.zeros((batch, cfg.width), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.width), dtype)}
+
+
+def rglru_decode_step(p, u, state, cfg: RGLRUConfig):
+    """u: (B, 1, d_model) -> (y, new_state). O(1) per token."""
+    x = u @ p["in_x"]["kernel"].astype(u.dtype)
+    gate = jax.nn.gelu(u @ p["in_gate"]["kernel"].astype(u.dtype))
+    x, new_conv = _conv1d(p, x, state["conv"])
+    a, bx = _gates(p, x, cfg)
+    h = a[:, 0] * state["hidden"].astype(jnp.float32) + bx[:, 0]
+    y = (h[:, None].astype(u.dtype) * gate) @ p["out"]["kernel"].astype(u.dtype)
+    return y, {"hidden": h, "conv": new_conv}

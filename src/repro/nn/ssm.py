@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm (the paper's Listing 1, adapted to JAX):
+sequence is split into chunks of length Q; within a chunk the output is a
+masked (1-semiseparable) attention-like product; across chunks a small
+recurrence carries the (H, P, N) state. Training/prefill use the chunked
+form (O(S Q) + O(S N P / Q)); decode is the pure recurrence
+``h = exp(dt*A) h + dt * B x`` -- O(1) per token, which is what makes the
+``long_500k`` decode shape linear for this arch.
+
+Dimensions follow mamba2-2.7b: d_inner = 2 * d_model, head_dim P = 64,
+H = d_inner / P heads, state N = 128, single B/C group (G=1 simplified,
+multi-head B/C broadcast).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn import init as winit
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256
+    unroll_scan: bool = False   # python-loop the inter-chunk recurrence
+    conv_width: int = 4
+    dt_min: float = 1e-3
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssd_init(key, cfg: SSDConfig):
+    k = jax.random.split(key, 6)
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj packs [z (gate), x, B, C, dt]
+    zxbcdt = di * 2 + 2 * N + H
+    dt = jnp.exp(jax.random.uniform(k[2], (H,)) *
+                 (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min))
+    return {
+        "in_proj": {"kernel": winit.lecun_normal(k[0], (cfg.d_model, zxbcdt))},
+        "conv": {"kernel": winit.lecun_normal(
+            k[1], (cfg.conv_width, di + 2 * N), fan_in=cfg.conv_width)},
+        "dt_bias": jnp.log(jnp.expm1(dt)),                      # softplus^-1
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_norm": L.rmsnorm_init(di),
+        "out_proj": {"kernel": winit.lecun_normal(k[4], (di, cfg.d_model))},
+    }
+
+
+def _split_proj(p, u, cfg: SSDConfig):
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = u @ p["in_proj"]["kernel"].astype(u.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _conv1d(p, xbc, state=None):
+    """Causal depthwise conv, width W. xbc: (B, S, C). state: (B, W-1, C)
+    carried for decode. Returns (y, new_state)."""
+    w = p["conv"]["kernel"].astype(xbc.dtype)                   # (W, C)
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                    # (B, S+W-1, C)
+    y = sum(xp[:, i: i + xbc.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(x, dt, A, B_, C, cfg: SSDConfig, h0=None):
+    """x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) (negative),
+    B_/C: (B,S,N). Returns (y, h_final) with h: (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(cfg.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding is exact: decay=exp(0)=1 (state frozen), input dt*x=0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // Q
+
+    xa = (x * dt[..., None]).reshape(Bb, nc, Q, H, P)           # dt-weighted input
+    a = (dt * A).reshape(Bb, nc, Q, H)                          # log decay per step
+    Bc = B_.reshape(Bb, nc, Q, N)
+    Cc = C.reshape(Bb, nc, Q, N)
+
+    cum = jnp.cumsum(a, axis=2)                                 # (B,nc,Q,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i.
+    # Mask BEFORE exp: above-diagonal seg is positive and exp would inf,
+    # poisoning the backward pass through where (inf * 0 = NaN in vjp).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(mask[None, None, :, :, None], seg, -60.0)
+    Lmat = jnp.exp(seg)
+    qk = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                  # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         qk.astype(jnp.float32), Lmat, xa.astype(jnp.float32))
+
+    # chunk summaries: state contribution of each chunk
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                             Bc.astype(jnp.float32), dec_to_end, xa.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    # inter-chunk recurrence over nc chunks (sequential scan, nc is small)
+    h_init = (jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    if nc == 1:
+        # no scan: keeps the math visible to XLA cost analysis
+        h_prev = h_init[:, None]
+        h_last = h_init * chunk_decay[:, 0, :, None, None] + chunk_state[:, 0]
+    elif cfg.unroll_scan:
+        hs, h = [], h_init
+        for c in range(nc):
+            hs.append(h)
+            h = h * chunk_decay[:, c, :, None, None] + chunk_state[:, c]
+        h_last, h_prev = h, jnp.stack(hs, axis=1)
+    else:
+        def step(h, inp):
+            cs, cd = inp
+            h_new = h * cd[..., None, None] + cs                # (B,H,P,N)
+            return h_new, h
+        cs_t = jnp.moveaxis(chunk_state, 1, 0)
+        cd_t = jnp.moveaxis(chunk_decay, 1, 0)
+        h_last, h_prev = lax.scan(step, h_init, (cs_t, cd_t))
+        h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nc,H,P,N)
+
+    dec_from_start = jnp.exp(cum)                               # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc.astype(jnp.float32), dec_from_start, h_prev)
+    y = (y_intra + y_inter).reshape(Bb, S_pad, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_apply(p, u, cfg: SSDConfig, state=None, return_state=False):
+    """Full-sequence SSD block. u: (B, S, d_model)."""
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _conv1d(p, xbc, conv_state)
+    x, B_, C = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(*x.shape[:2], H, P)
+    h0 = None if state is None else state["ssm"]
+    y, h = _ssd_chunked(xh, dt, A, B_, C, cfg, h0)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh                # skip
+    y = y.reshape(*u.shape[:2], di)
+    y = L.rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["kernel"].astype(u.dtype)
+    if return_state:
+        return out, {"ssm": h, "conv": new_conv}
+    return out
+
+
+def ssd_init_state(batch, cfg: SSDConfig, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def ssd_decode_step(p, u, state, cfg: SSDConfig):
+    """One-token recurrence. u: (B, 1, d_model). O(1) in context length."""
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc, new_conv = _conv1d(p, xbc, state["conv"])
+    x, B_, C = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x[:, 0].reshape(-1, H, P)                              # (B,H,P)
+    decay = jnp.exp(dt * A)                                     # (B,H)
+    h = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", B_[:, 0].astype(jnp.float32), dt, xh.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), h)
+    y = y.astype(u.dtype) + p["D"].astype(u.dtype)[:, None] * xh
+    y = y.reshape(-1, 1, di)
+    y = L.rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]["kernel"].astype(u.dtype)
+    return out, {"ssm": h, "conv": new_conv}

@@ -1,0 +1,85 @@
+"""Serving: batched prefill + autoregressive decode over the KV cache.
+
+``make_serve_step`` builds the jitted one-token step that the decode dry-run
+shapes lower (decode_32k, long_500k). ``generate`` runs a full
+prefill-then-decode loop (greedy or temperature sampling) for the examples.
+``RequestBatcher`` pads/packs incoming prompts into fixed serving shapes so
+every request reuses the same compiled program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: T.ArchConfig):
+    """(params, token (B,1), cache, index) -> (next_token, logits, cache)."""
+    @jax.jit
+    def serve_step(params, token, cache, index):
+        logits, cache = T.decode_step(params, token, cache, index, cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step
+
+
+def generate(params, prompts, cfg: T.ArchConfig, *, max_new_tokens=16,
+             vision=None, cache_len=None, temperature=0.0, key=None):
+    """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
+    B, S = prompts.shape
+    cache_len = cache_len or (S + max_new_tokens)
+    logits, cache = jax.jit(functools.partial(
+        T.prefill, cfg=cfg, cache_len=cache_len))(params, prompts,
+                                                  vision=vision)
+    step = make_serve_step(cfg)
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            k, lg[:, -1] / temperature).astype(jnp.int32)[:, None]
+
+    key = key if key is not None else jax.random.key(0)
+    tok = sample(logits, key)
+    out = [tok]
+    for t in range(1, max_new_tokens):
+        key, sub = jax.random.split(key)
+        nxt, logits, cache = step(params, tok, cache, S + t - 1)
+        tok = sample(logits, sub) if temperature > 0 else nxt
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+@dataclasses.dataclass
+class RequestBatcher:
+    """Packs variable-length prompts into a fixed (batch, seq) shape.
+
+    Real serving systems (vLLM-style) continuously batch; this is the
+    synchronous version: collect up to ``batch_size`` requests, left-pad to
+    ``seq_len``, run one generate() call, slice results back out.
+    """
+    batch_size: int
+    seq_len: int
+    pad_id: int = 0
+
+    def pack(self, prompts: list[list[int]]):
+        if len(prompts) > self.batch_size:
+            raise ValueError(f"got {len(prompts)} > batch {self.batch_size}")
+        n = len(prompts)
+        buf = np.full((self.batch_size, self.seq_len), self.pad_id, np.int32)
+        lens = np.zeros((self.batch_size,), np.int32)
+        for i, prom in enumerate(prompts):
+            prom = prom[-self.seq_len:]
+            buf[i, self.seq_len - len(prom):] = prom     # left-pad
+            lens[i] = len(prom)
+        return jnp.asarray(buf), jnp.asarray(lens), n
+
+    def unpack(self, generated, n_real: int):
+        return [list(np.asarray(generated[i])) for i in range(n_real)]

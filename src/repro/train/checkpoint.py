@@ -1,0 +1,73 @@
+"""Checkpointing: flat-leaf npz with path-keyed entries.
+
+Works for any pytree of arrays (params, LARS momentum, step). Arrays are
+gathered to host (fine at the scales this container runs; on a real pod
+each host writes its own shard -- the path-keyed format is already
+per-leaf, so sharded writes are a straightforward extension).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.train.state import TrainState
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, state: TrainState, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{name}.npz")
+    payload = {}
+    for prefix, tree in (("params", state.params),
+                         ("opt", state.opt_state)):
+        for k, v in _flatten(tree).items():
+            payload[f"{prefix}{_SEP}{k}"] = v
+    payload["step"] = np.asarray(state.step)
+    np.savez(path, **payload)
+    return path
+
+
+def restore(path: str, like: TrainState) -> TrainState:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        def fill(prefix, tree):
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            leaves = []
+            for p, leaf in flat:
+                key = prefix + _SEP + _SEP.join(
+                    str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+                arr = data[key]
+                if arr.shape != leaf.shape:
+                    raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+                leaves.append(arr.astype(leaf.dtype))
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(tree), leaves)
+
+        return TrainState(params=fill("params", like.params),
+                          opt_state=fill("opt", like.opt_state),
+                          step=jax.numpy.asarray(data["step"]))
+
+
+def latest(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    cands = [f for f in os.listdir(directory) if f.endswith(".npz")]
+    if not cands:
+        return None
+    cands.sort(key=lambda f: os.path.getmtime(os.path.join(directory, f)))
+    return os.path.join(directory, cands[-1])

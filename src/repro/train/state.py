@@ -1,0 +1,24 @@
+"""Train state: fp32 master params + LARS momentum + step counter."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lars
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @staticmethod
+    def create(params) -> "TrainState":
+        return TrainState(params=params, opt_state=lars.init(params),
+                          step=jnp.zeros((), jnp.int32))

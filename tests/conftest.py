@@ -1,0 +1,12 @@
+"""Test session setup.
+
+Collective/grad-sync tests need >1 device, so we ask the CPU platform for 8
+host devices (cheap; NOT the 512-device production mesh -- that is only ever
+forced inside launch/dryrun.py, which runs as its own process). All tests are
+written to be device-count-agnostic given >= 8 devices.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+prefill/decode step on CPU; output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.shapes import long_context_variant
+from repro.core import losses
+from repro.models import transformer as T
+
+ARCHS = registry.ARCH_IDS
+
+
+def _inputs(cfg, batch=2, seq=32):
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (batch, seq)), jnp.int32)
+    vision = None
+    if cfg.vision_tokens:
+        vision = jnp.asarray(
+            rng.randn(batch, cfg.vision_tokens, cfg.cross_kv_dim), jnp.bfloat16)
+    return tokens, vision
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_forward_shapes_and_finite(arch_id):
+    cfg = registry.get_smoke(arch_id)
+    params = T.init(jax.random.key(0), cfg)
+    tokens, vision = _inputs(cfg)
+    logits, aux = jax.jit(
+        lambda p, t, v: T.forward(p, t, cfg, vision=v))(params, tokens, vision)
+    assert logits.shape == (*tokens.shape, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch_id
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_train_step_reduces_loss(arch_id):
+    """One SGD step on one batch must reduce that batch's loss."""
+    cfg = registry.get_smoke(arch_id)
+    params = T.init(jax.random.key(1), cfg)
+    tokens, vision = _inputs(cfg, batch=2, seq=16)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = T.forward(p, tokens, cfg, vision=vision)
+        return losses.label_smoothing_xent(logits, labels, 0.1) + 0.01 * aux
+
+    loss0, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss0))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), "NaN/inf gradients"
+    assert float(gnorm) > 0, "no gradient signal"
+    params2 = jax.tree.map(
+        lambda p, g: p - 0.05 * g.astype(p.dtype) if p.dtype != jnp.int32 else p,
+        params, grads)
+    loss1 = jax.jit(lambda p: loss_fn(p))(params2)
+    assert float(loss1) < float(loss0), (arch_id, float(loss0), float(loss1))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_prefill_then_decode_matches_forward(arch_id):
+    """Decode step at position S must equal the forward logits when the
+    model is run on the extended sequence (numerical agreement check)."""
+    cfg = registry.get_smoke(arch_id)
+    # fp32 + no-drop MoE capacity so prefill+decode == forward exactly
+    cfg = T.ArchConfig(**{**cfg.__dict__, "compute_dtype": jnp.float32,
+                          "moe_capacity_factor": (cfg.n_experts / cfg.top_k
+                                                  if cfg.mlp == "moe" else 1.25)})
+    params = T.init(jax.random.key(2), cfg)
+    seq = 12
+    tokens, vision = _inputs(cfg, batch=1, seq=seq + 1)
+    prompt, nxt = tokens[:, :seq], tokens[:, seq:]
+
+    logits_pre, cache = jax.jit(
+        lambda p, t, v: T.prefill(p, t, cfg, vision=v, cache_len=seq + 8,
+                                  cache_dtype=jnp.float32))(params, prompt, vision)
+    logits_dec, _ = jax.jit(
+        lambda p, t, c: T.decode_step(p, t, c, seq, cfg))(params, nxt, cache)
+
+    full_logits, _ = jax.jit(
+        lambda p, t, v: T.forward(p, t, cfg, vision=v))(params, tokens, vision)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, 0]), np.asarray(full_logits[:, seq - 1]),
+        rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(full_logits[:, seq]),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch_id", ["gemma2-27b", "llama3-405b", "qwen3-1.7b"])
+def test_long_context_variant_is_windowed(arch_id):
+    cfg = long_context_variant(registry.get_smoke(arch_id))
+    assert all(k != "attn" for k in cfg.pattern)
+    assert cfg.window is not None
+
+
+def test_param_count_analytics_match_actual():
+    for arch_id in ARCHS:
+        cfg = registry.get_smoke(arch_id)
+        params = T.init(jax.random.key(0), cfg)
+        actual = sum(p.size for p in jax.tree.leaves(params))
+        # analytic count excludes norms/biases/small tensors: within 10%
+        est = cfg.num_params()
+        assert abs(actual - est) / actual < 0.15, (arch_id, actual, est)
+
+
+def test_full_config_param_counts():
+    """Sanity-check the full (unallocated) configs against known sizes."""
+    assert abs(registry.get("llama3-405b").num_params() - 405e9) / 405e9 < 0.03
+    assert abs(registry.get("kimi-k2-1t-a32b").num_params() - 1.0e12) / 1e12 < 0.1
+    active = registry.get("kimi-k2-1t-a32b").active_params()
+    assert abs(active - 32e9) / 32e9 < 0.3
+    assert abs(registry.get("gemma2-27b").num_params() - 27e9) / 27e9 < 0.15
+    assert abs(registry.get("mamba2-2.7b").num_params() - 2.7e9) / 2.7e9 < 0.25

@@ -1,0 +1,124 @@
+"""Launch-layer units: sharding rules, HLO stats parsing, shapes config."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, long_context_variant
+from repro.launch import hlo_stats
+from repro.launch.mesh import cache_pspecs, dp_axes_of, param_pspecs
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_param_rules_basic():
+    params = {
+        "embed": {"embedding": sds((256000, 4096))},
+        "layer": {"mixer": {"q": {"kernel": sds((4096, 4096))},
+                            "o": {"kernel": sds((4096, 4096))}},
+                  "mlp": {"up": {"kernel": sds((4096, 16384))}},
+                  "pre_norm": {"norm_scale": sds((4096,))}},
+    }
+    specs = param_pspecs(params, mesh=MESH)
+    assert specs["embed"]["embedding"] == P("model", None)
+    assert specs["layer"]["mixer"]["q"]["kernel"] == P(None, "model")
+    assert specs["layer"]["mixer"]["o"]["kernel"] == P("model", None)
+    assert specs["layer"]["pre_norm"]["norm_scale"] == P()
+
+
+def test_param_rules_divisibility_fallback():
+    # granite: 40 experts don't divide model=16 -> axis moves to d_ff dim
+    params = {"mlp": {"experts": {"up": sds((40, 1536, 512))}}}
+    specs = param_pspecs(params, mesh=MESH)
+    # model axis moved off the non-divisible expert dim (40) onto d_model
+    assert specs["mlp"]["experts"]["up"] == P(None, "model", None)
+    # mamba vocab 50280 doesn't divide -> model moves to d_model dim
+    params = {"embed": {"embedding": sds((50280, 2560))}}
+    specs = param_pspecs(params, mesh=MESH)
+    assert specs["embed"]["embedding"] == P(None, "model")
+
+
+def test_param_rules_scanned_leading_dim():
+    params = {"blocks": [{"mixer": {"q": {"kernel": sds((28, 4096, 4096))}}}]}
+    specs = param_pspecs(params, mesh=MESH)
+    assert specs["blocks"][0]["mixer"]["q"]["kernel"] == P(None, None, "model")
+
+
+def test_param_rules_fsdp():
+    params = {"layer": {"mlp": {"up": {"kernel": sds((4096, 16384))}}}}
+    specs = param_pspecs(params, fsdp=True, mesh=MESH)
+    assert specs["layer"]["mlp"]["up"]["kernel"] == P("data", "model")
+
+
+def test_cache_rules():
+    cache = {
+        "prefix": [{"k": sds((128, 32768, 16, 128), jnp.bfloat16)}],
+        "blocks": {"k": sds((28, 128, 32768, 8, 128), jnp.bfloat16)},
+    }
+    specs = cache_pspecs(cache, ("data",), MESH)
+    # 16 kv heads divide -> heads sharded
+    assert specs["prefix"][0]["k"] == P(("data",), None, "model", None)
+    # 8 kv heads don't -> head_dim sharded; scanned leading dim unsharded
+    assert specs["blocks"]["k"] == P(None, ("data",), None, None, "model")
+
+
+def test_cache_rules_batch_one():
+    cache = {"prefix": [{"k": sds((1, 32768, 16, 128), jnp.bfloat16)}]}
+    specs = cache_pspecs(cache, ("data",), MESH)
+    assert specs["prefix"][0]["k"] == P(None, None, "model", None)
+
+
+def test_hlo_stats_parsing():
+    text = """
+      %ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups=...
+      %ar.1 = f32[1024]{0} all-reduce-start(%y), to_apply=%add
+      %rs = bf16[256,16]{1,0} reduce-scatter(%z)
+      %cp = f32[8,8]{1,0} collective-permute(%w)
+      ROOT %t = (f32[8]{0}) tuple(%cp)
+    """
+    st = hlo_stats.collective_stats(text)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 4096 * 2
+    assert st["all-reduce"]["count"] == 1
+    assert st["all-reduce"]["bytes"] == 1024 * 4
+    assert st["reduce-scatter"]["bytes"] == 256 * 16 * 2
+    assert st["by_dtype"]["f32"] == 1024 * 4 + 64 * 4
+    assert st["total_count"] == 4
+
+
+def test_shapes_and_long_variant():
+    assert SHAPES["train_4k"].step == "train"
+    assert SHAPES["long_500k"].step == "decode"
+    from repro.configs import registry
+    m = long_context_variant(registry.get("mamba2-2.7b"))
+    assert m.pattern == ("ssd",)          # ssm untouched
+    g = long_context_variant(registry.get("gemma-7b"))
+    assert g.pattern == ("local",) and g.window == 32768
+
+
+def test_dryrun_results_complete():
+    """All 80 combos exist on disk and lowered successfully."""
+    import glob
+    import json
+    files = glob.glob("experiments/dryrun/*.json")
+    if len(files) < 80:
+        pytest.skip("dry-run sweep artifacts not generated in this checkout")
+    assert len(files) == 80
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        assert rec["cost"]["flops"] is not None
+        assert rec["collectives"]["total_count"] >= 0
