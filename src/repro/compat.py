@@ -1,0 +1,104 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+``shard_map`` has lived in three places / signatures:
+
+* jax >= 0.6:   ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+                axis_names=<manual axes>, check_vma=...)``
+* jax 0.4/0.5:  ``jax.experimental.shard_map.shard_map(f, mesh, in_specs,
+                out_specs, check_rep=..., auto=<NON-manual axes>)``
+
+The repo is written against the new keyword surface (``axis_names`` names
+the *manual* axes, ``check_vma`` replaces ``check_rep``); this module maps
+those keywords onto whichever implementation the installed jax provides, so
+every caller does ``from repro.compat import shard_map`` and nothing else.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+
+_new_shard_map = getattr(jax, "shard_map", None)
+if _new_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+else:
+    _old_shard_map = None
+
+
+# Inside a *partial*-manual shard_map (some mesh axes auto, e.g. the model
+# axis on the non-FSDP train path), the old-API jaxlib SPMD partitioner
+# hard-aborts ("Check failed: ...IsManualSubgroup()", an F-level check that
+# kills the process) on psum_scatter / all_gather / ppermute -- and on the
+# transformer fwd/bwd graph itself once auto-sharded params flow through.
+# Fully-manual shard_map (every mesh axis manual -- the whole test suite and
+# the pure-DP trainer) is unaffected. Callers that mix auto axes must gate
+# on this flag and degrade/skip when it is False (see launch/dryrun.py).
+SUPPORTS_PARTIAL_MANUAL_COLLECTIVES = _new_shard_map is not None
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    jax <= 0.4 returns a list with one properties-dict per partition; newer
+    jax returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def axis_size(axis_name: Any) -> int:
+    """``lax.axis_size`` resolved across jax versions.
+
+    Older jax has no ``lax.axis_size``; there ``lax.psum(1, axis)`` is
+    constant-folded to a static python int at trace time, which is exactly
+    the named-axis size. Accepts a single axis name or a tuple (product).
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        if isinstance(axis_name, (tuple, list)):
+            size = 1
+            for a in axis_name:
+                size *= lax.axis_size(a)
+            return size
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def shard_map(f: Callable | None = None, *, mesh: Any, in_specs: Any,
+              out_specs: Any, axis_names: Any = None,
+              check_vma: bool | None = None,
+              check_rep: bool | None = None) -> Callable:
+    """``jax.shard_map`` resolved across jax versions.
+
+    ``axis_names`` is the set of mesh axes to treat as manual (omit for all
+    axes manual); ``check_vma``/``check_rep`` are accepted interchangeably.
+    Usable as ``shard_map(f, mesh=..., ...)`` or via ``functools.partial``
+    with ``f`` omitted (decorator style).
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma, check_rep=check_rep)
+
+    check = check_vma if check_vma is not None else check_rep
+
+    if _new_shard_map is not None:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        if check is not None:
+            kwargs["check_vma"] = check
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+    # old API: `auto` is the complement of the manual axes on the mesh
+    kwargs = {}
+    if axis_names is not None:
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if check is not None:
+        kwargs["check_rep"] = check
+    return _old_shard_map(f, mesh, in_specs, out_specs, **kwargs)

@@ -33,25 +33,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
 from repro.core.topology import TorusGrid
 
 AxisName = str | tuple[str, ...]
-
-
-def _axis_size(axis: AxisName) -> int:
-    if isinstance(axis, (tuple, list)):
-        size = 1
-        for a in axis:
-            size *= lax.axis_size(a)
-        return size
-    return lax.axis_size(axis)
 
 
 def _axis_index(axis: AxisName):
     if isinstance(axis, (tuple, list)):
         idx = jnp.int32(0)
         for a in axis:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * _axis_size(a) + lax.axis_index(a)
         return idx
     return lax.axis_index(axis)
 
@@ -241,3 +233,62 @@ def comm_cost_model(strategy: str, nbytes: int, x: int, y: int,
         raise ValueError(strategy)
     seconds = steps * latency + wire / link_bw
     return {"strategy": strategy, "steps": steps, "wire_bytes": wire, "seconds": seconds}
+
+
+def bucketed_comm_cost_model(strategy: str, nbytes: int, bucket_bytes: int,
+                             x: int, y: int, link_bw: float, latency: float,
+                             backward_seconds: float = 0.0) -> dict:
+    """Alpha-beta cost of a *bucketed* gradient exchange overlapped with
+    backprop (the schedule ``grad_sync.sync_tree`` emits for
+    ``bucket_bytes > 0``).
+
+    The gradient is split into ``k = ceil(nbytes / bucket_bytes)`` buckets.
+    Every bucket pays the full per-step latency (steps x alpha -- the cost
+    of more buckets) but bucket ``i`` becomes ready at
+    ``backward_seconds * (i + 1) / k`` (gradients stream out of backprop in
+    reverse-layer order at roughly uniform rate) and its exchange runs as
+    soon as both the gradients and the link are free -- the overlap win.
+
+    Returns::
+
+        num_buckets, per_bucket (comm_cost_model dicts),
+        serial_seconds   -- sum of bucket costs, no overlap (lower bound on
+                            the fused latency had we not overlapped),
+        exposed_seconds  -- comm time NOT hidden behind backprop
+                            (finish of last bucket - backward_seconds),
+        fused_exposed_seconds -- the single-buffer baseline: the whole
+                            exchange starts after backward, fully exposed,
+        overlap_win_seconds -- fused_exposed - exposed.
+
+    With ``backward_seconds=0`` this degenerates to the pure serial
+    latency-vs-bandwidth tradeoff (more buckets strictly worse).
+    """
+    if bucket_bytes <= 0 or bucket_bytes >= nbytes:
+        k = 1
+        sizes = [nbytes]
+    else:
+        k = -(-int(nbytes) // int(bucket_bytes))
+        sizes = [bucket_bytes] * (k - 1) + [nbytes - bucket_bytes * (k - 1)]
+
+    per_bucket = [comm_cost_model(strategy, s, x, y, link_bw, latency)
+                  for s in sizes]
+    serial = sum(c["seconds"] for c in per_bucket)
+
+    # pipeline simulation: one link, buckets issued in ready order
+    t = 0.0
+    for i, c in enumerate(per_bucket):
+        ready = backward_seconds * (i + 1) / k
+        t = max(t, ready) + c["seconds"]
+    exposed = t - backward_seconds
+
+    fused = comm_cost_model(strategy, nbytes, x, y, link_bw, latency)
+    return {
+        "strategy": strategy,
+        "num_buckets": k,
+        "bucket_bytes": bucket_bytes,
+        "per_bucket": per_bucket,
+        "serial_seconds": serial,
+        "exposed_seconds": exposed,
+        "fused_exposed_seconds": fused["seconds"],
+        "overlap_win_seconds": fused["seconds"] - exposed,
+    }

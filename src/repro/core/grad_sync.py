@@ -3,32 +3,47 @@ first-class framework feature).
 
 Two execution modes, chosen by ``fuse``:
 
-* ``fuse=True`` (paper-faithful, pure data-parallel): every leaf is
-  flattened into a single fused buffer (mixed-precision: comm-dtype group +
-  fp32 group, §3.2 of the paper keeps BN statistics and LARS in fp32),
-  padded to the ring size, exchanged with the selected strategy, and
-  scattered back. This is what the paper's NCCL implementation does with
-  bucket fusion, and it is only legal when the leaves are replicated over
-  the model axis (ResNet / pure-DP configs).
+* ``fuse=True`` (paper-faithful, pure data-parallel): leaves are flattened
+  into fused comm buffers (mixed-precision: comm-dtype group + fp32 group,
+  §3.2 of the paper keeps BN statistics and LARS in fp32), padded to the
+  ring size, exchanged with the selected strategy, and scattered back. This
+  is what the paper's NCCL implementation does with bucket fusion, and it is
+  only legal when the leaves are replicated over the model axis (ResNet /
+  pure-DP configs).
+
+  ``bucket_bytes`` controls *how many* fused buffers there are:
+
+  - ``bucket_bytes=0`` (legacy): one buffer per precision group -- the
+    exchange can only start after the full backward pass.
+  - ``bucket_bytes>0``: each precision group is greedily partitioned into
+    size-targeted buckets, **ordered in reverse-backprop order** (the pytree
+    flatten order follows the forward pass, so the *last* leaves get their
+    gradients *first* during backprop). One strategy-dispatch all-reduce is
+    issued per bucket, earliest-ready bucket first, so XLA's latency-hiding
+    scheduler can overlap each bucket's 2D-Torus exchange with the
+    remaining backward compute. See docs/gradient_sync.md for the layout
+    contract and ``collectives.bucketed_comm_cost_model`` for the
+    latency-vs-overlap tradeoff model.
 
 * ``fuse=False`` (tensor/fsdp-sharded models): each leaf is synchronized
   independently along its leading dimension (padded to X), so model-axis
   sharding on other dimensions is untouched by the exchange. Leaves smaller
   than one torus row fall back to ``psum`` (latency-bound anyway).
 
-Both modes must run inside ``jax.shard_map`` where the grid axes are manual.
+Both modes must run inside ``shard_map`` (see repro.compat) where the grid
+axes are manual.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import collectives
 from repro.core.topology import TorusGrid
 
@@ -42,6 +57,9 @@ class GradSyncConfig:
     fuse: bool = True
     mean: bool = True
     small_leaf_threshold: int = 2048    # below: plain psum (latency-bound)
+    bucket_bytes: int = 0               # 0: single fused buffer per group;
+                                        # >0: size-targeted comm buckets
+    reverse_order: bool = True          # issue buckets reverse-backprop first
 
 
 def _path_str(path) -> str:
@@ -58,24 +76,104 @@ def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
 
 
 def _world(grid: TorusGrid) -> int:
-    from jax import lax
     size = 1
     for a in grid.axes:
-        size *= lax.axis_size(a)
+        size *= compat.axis_size(a)
     return size
 
 
 def _ring_multiple(grid: TorusGrid) -> int:
     """Leading-dim divisibility required by the strategies' scatter phases."""
-    from jax import lax
     x = 1
     for a in grid.h_axes:
-        x *= lax.axis_size(a)
+        x *= compat.axis_size(a)
     y = 1
     for a in grid.v_axes:
-        y *= lax.axis_size(a)
+        y *= compat.axis_size(a)
     # torus2d ring lowering reduce-scatters the 1/X chunk again over Y
     return x * y
+
+
+# ---------------------------------------------------------------------------
+# Bucket partitioning (pure python; also used by benchmarks and the dry-run
+# HLO audit, so it must stay trace-free)
+# ---------------------------------------------------------------------------
+
+def partition_buckets(leaf_bytes: Sequence[int], bucket_bytes: int) -> list[list[int]]:
+    """Greedy partition of leaf indices into size-targeted buckets.
+
+    Walks the leaves in the given order and closes a bucket as soon as its
+    cumulative size reaches ``bucket_bytes`` (so each bucket is at least the
+    target size except the last, and a single oversized leaf forms its own
+    bucket). ``bucket_bytes <= 0`` returns one bucket with everything --
+    the legacy fully-fused layout.
+    """
+    idx = list(range(len(leaf_bytes)))
+    if bucket_bytes <= 0:
+        return [idx] if idx else []
+    buckets: list[list[int]] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for i in idx:
+        cur.append(i)
+        cur_bytes += leaf_bytes[i]
+        if cur_bytes >= bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _itemsize(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def _precision_groups(leaves_p, cfg: GradSyncConfig) -> list[tuple[list[int], Any]]:
+    """Split leaf indices into (comm-dtype, fp32) groups, preserving order.
+
+    The paper exchanges the bulk of the gradient in half precision but keeps
+    BN statistics / scales / biases (and any fp32 vector leaf) in fp32;
+    buckets never mix the two groups.
+    """
+    comm_idx, fp32_idx = [], []
+    for k, (path, leaf) in enumerate(leaves_p):
+        ps = _path_str(path)
+        if any(tag in ps for tag in cfg.fp32_paths) or \
+                leaf.dtype == jnp.float32 and leaf.ndim <= 1:
+            fp32_idx.append(k)
+        else:
+            comm_idx.append(k)
+    return [(comm_idx, cfg.comm_dtype), (fp32_idx, jnp.float32)]
+
+
+def bucket_layout(grads, cfg: GradSyncConfig = GradSyncConfig()) -> list[dict]:
+    """The bucket schedule ``sync_tree`` will issue, as metadata.
+
+    Returns one dict per bucket in **issue order** with keys ``group``
+    ("comm"|"fp32"), ``dtype``, ``nbytes``, ``num_leaves``, ``paths``.
+    Works on concrete arrays or ShapeDtypeStructs; never traces. Used by the
+    dry-run audit and the bucket-sweep benchmark to cross-check the HLO
+    against the intended schedule.
+    """
+    leaves_p, _ = jax.tree_util.tree_flatten_with_path(grads)
+    out = []
+    for name, (idx_group, dtype) in zip(
+            ("comm", "fp32"), _precision_groups(leaves_p, cfg)):
+        if not idx_group:
+            continue
+        order = list(reversed(idx_group)) if cfg.reverse_order else list(idx_group)
+        sizes = [leaves_p[k][1].size * _itemsize(dtype) for k in order]
+        for bucket in partition_buckets(sizes, cfg.bucket_bytes):
+            ks = [order[i] for i in bucket]
+            out.append({
+                "group": name,
+                "dtype": np.dtype(dtype).name,
+                "nbytes": sum(sizes[i] for i in bucket),
+                "num_leaves": len(ks),
+                "paths": [_path_str(leaves_p[k][0]) for k in ks],
+            })
+    return out
 
 
 def sync_tree(grads, grid: TorusGrid, cfg: GradSyncConfig = GradSyncConfig()):
@@ -91,34 +189,36 @@ def _sync_fused(grads, grid: TorusGrid, cfg: GradSyncConfig):
         return grads
     world = _world(grid)
     scale = 1.0 / world if cfg.mean else 1.0
+    mult = _ring_multiple(grid)
 
-    comm_idx, fp32_idx = [], []
-    for k, (path, leaf) in enumerate(leaves_p):
-        ps = _path_str(path)
-        if any(tag in ps for tag in cfg.fp32_paths) or leaf.dtype == jnp.float32 and leaf.ndim <= 1:
-            fp32_idx.append(k)
-        else:
-            comm_idx.append(k)
+    leaves = [leaf for _, leaf in leaves_p]
+    out: list = [None] * len(leaves)
 
-    leaves = [l for _, l in leaves_p]
-    out = [None] * len(leaves)
-
-    for idx_group, dtype in ((comm_idx, cfg.comm_dtype), (fp32_idx, jnp.float32)):
+    for idx_group, dtype in _precision_groups(leaves_p, cfg):
         if not idx_group:
             continue
-        flat = jnp.concatenate(
-            [jnp.ravel(leaves[k]).astype(dtype) for k in idx_group])
-        # pre-scale: keeps fp16/bf16 partial sums in range (paper exchanges
-        # in half precision)
-        flat = flat * jnp.asarray(scale, dtype)
-        padded = _pad_to(flat, _ring_multiple(grid))
-        reduced = collectives.all_reduce(padded, grid, cfg.strategy, cfg.lowering)
-        reduced = reduced[: flat.shape[0]]
-        off = 0
-        for k in idx_group:
-            size = leaves[k].size
-            out[k] = reduced[off: off + size].reshape(leaves[k].shape).astype(leaves[k].dtype)
-            off += size
+        # reverse-backprop order: tree-flatten order tracks the forward
+        # pass, so the last leaves' grads materialize first in backward --
+        # their bucket is issued first and overlaps the rest of backprop.
+        order = list(reversed(idx_group)) if cfg.reverse_order else list(idx_group)
+        sizes = [leaves[k].size * _itemsize(dtype) for k in order]
+        for bucket in partition_buckets(sizes, cfg.bucket_bytes):
+            ks = [order[i] for i in bucket]
+            flat = jnp.concatenate(
+                [jnp.ravel(leaves[k]).astype(dtype) for k in ks])
+            # pre-scale: keeps fp16/bf16 partial sums in range (paper
+            # exchanges in half precision)
+            flat = flat * jnp.asarray(scale, dtype)
+            padded = _pad_to(flat, mult)
+            reduced = collectives.all_reduce(padded, grid, cfg.strategy,
+                                             cfg.lowering)
+            reduced = reduced[: flat.shape[0]]
+            off = 0
+            for k in ks:
+                size = leaves[k].size
+                out[k] = reduced[off: off + size].reshape(
+                    leaves[k].shape).astype(leaves[k].dtype)
+                off += size
 
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -32,6 +32,7 @@ import jax
 
 from repro.configs import registry
 from repro.configs.shapes import SHAPES, long_context_variant
+from repro import compat
 from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
@@ -44,7 +45,7 @@ def _cost_cfg(cfg: T.ArchConfig, k_blocks: int, seq_len: int) -> T.ArchConfig:
 
 
 def _extract(compiled):
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     coll = hlo_stats.collective_stats(compiled.as_text())
     return {
         "flops": ca.get("flops", 0.0),

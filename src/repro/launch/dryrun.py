@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import registry
 from repro.configs.shapes import SHAPES, ShapeConfig, long_context_variant, needs_long_variant
 from repro.core import losses
@@ -44,6 +45,21 @@ from repro.models import transformer as T
 # explicit shard_map gradient sync.
 FSDP_ARCHS = {"llama-3.2-vision-90b", "kimi-k2-1t-a32b", "llama3-405b",
               "gemma2-27b"}
+
+
+def effective_sync_strategy(strategy: str) -> str:
+    """Downgrade strategies that old jaxlib cannot lower on this path.
+
+    The non-FSDP train step runs grad sync inside a partial-manual
+    shard_map (model axis stays auto); on jax < 0.5 the SPMD partitioner
+    check-fails on the scatter/gather/permute collectives of the torus2d
+    and ring schedules there (compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES).
+    psum and the xla hierarchical lowering only emit all-reduces and
+    compile fine -- downgrade and record it rather than abort the audit.
+    """
+    if compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
+        return strategy
+    return strategy if strategy in ("psum", "hierarchical") else "hierarchical"
 
 
 def sds(shape, dtype, mesh=None, spec=None):
@@ -80,7 +96,7 @@ def _vision_sds(cfg, batch, mesh, dp):
 # ---------------------------------------------------------------------------
 
 def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
-                fuse=None):
+                fuse=None, bucket_bytes=0):
     dp = dp_axes_of(mesh)
     fsdp = arch_id in FSDP_ARCHS
     params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
@@ -120,9 +136,12 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         comm_dtype = (jnp.bfloat16 if jax.default_backend() == "tpu"
                       else jnp.float32)
         grid = select_grid(dp)
-        gcfg = GradSyncConfig(strategy=sync_strategy,
+        # bucket_bytes only changes the schedule on the fused (pure-DP)
+        # path; per-leaf sync is already one exchange per leaf.
+        gcfg = GradSyncConfig(strategy=effective_sync_strategy(sync_strategy),
                               fuse=False if fuse is None else fuse,
-                              comm_dtype=comm_dtype)
+                              comm_dtype=comm_dtype,
+                              bucket_bytes=bucket_bytes)
 
         def step(params, mom, tokens, labels, vision):
             loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
@@ -132,7 +151,7 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
                 params, grads, {"momentum": mom}, lr=1.0, momentum=0.9)
             return jax.lax.pmean(loss, dp), new_p, new_m["momentum"]
 
-        smapped = jax.shard_map(
+        smapped = compat.shard_map(
             step, mesh=mesh,
             in_specs=(P(), P(), P(dp), P(dp),
                       P(dp) if vision is not None else P()),
@@ -186,7 +205,7 @@ def build_decode(arch_id, cfg, shape, mesh):
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             sync_strategy: str = "torus2d", out_dir: str = "experiments/dryrun",
-            save: bool = True, quiet: bool = False) -> dict:
+            save: bool = True, quiet: bool = False, bucket_bytes: int = 0) -> dict:
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -194,7 +213,18 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
 
     t0 = time.time()
     if shape.step == "train":
-        fn, args = build_train(arch_id, cfg, shape, mesh, sync_strategy)
+        if arch_id not in FSDP_ARCHS and \
+                not compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
+            # jaxlib < 0.5's SPMD partitioner hard-aborts (F-level check,
+            # not catchable) on the transformer fwd/bwd inside a
+            # partial-manual shard_map; fail with a python error instead.
+            raise RuntimeError(
+                f"{arch_id} train dry-run needs partial-manual shard_map "
+                "support (jax >= 0.5); this jaxlib's SPMD partitioner "
+                "aborts the process on it. FSDP archs and prefill/decode "
+                "shapes are unaffected (see repro/compat.py).")
+        fn, args = build_train(arch_id, cfg, shape, mesh, sync_strategy,
+                               bucket_bytes=bucket_bytes)
     elif shape.step == "prefill":
         fn, args = build_prefill(arch_id, cfg, shape, mesh)
     else:
@@ -207,7 +237,7 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = hlo_stats.collective_stats(hlo)
 
@@ -217,6 +247,12 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
         "step": shape.step, "chips": int(n_chips),
         "fsdp": arch_id in FSDP_ARCHS,
         "sync_strategy": sync_strategy if shape.step == "train" else None,
+        "sync_strategy_effective": (effective_sync_strategy(sync_strategy)
+                                    if shape.step == "train" and
+                                    arch_id not in FSDP_ARCHS else None),
+        "bucket_bytes": bucket_bytes if shape.step == "train" else None,
+        "bucket_audit": (hlo_stats.bucket_audit(hlo, min_bytes=1024)["by_kind"]
+                         if shape.step == "train" else None),
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -258,6 +294,9 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--sync", default="torus2d",
                     choices=["psum", "ring", "hierarchical", "torus2d"])
+    ap.add_argument("--bucket-bytes", type=int, default=0,
+                    help="gradient-sync bucket size target; 0 = single fused "
+                         "buffer (see docs/gradient_sync.md)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -276,8 +315,16 @@ def main():
                 if args.skip_existing and os.path.exists(path):
                     print(f"[SKIP] {arch_id} {shape_name} {mesh_name}")
                     continue
+                if (SHAPES[shape_name].step == "train"
+                        and arch_id not in FSDP_ARCHS
+                        and not compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES):
+                    print(f"[SKIP] {arch_id} {shape_name} {mesh_name}: "
+                          "partial-manual shard_map train step needs "
+                          "jax >= 0.5 on this jaxlib")
+                    continue
                 try:
-                    run_one(arch_id, shape_name, mp, args.sync, args.out)
+                    run_one(arch_id, shape_name, mp, args.sync, args.out,
+                            bucket_bytes=args.bucket_bytes)
                 except Exception as e:  # noqa: BLE001
                     failures.append((arch_id, shape_name, mp, repr(e)))
                     print(f"[FAIL] {arch_id} {shape_name} multi_pod={mp}: {e}")

@@ -99,6 +99,49 @@ def collective_stats(hlo_text: str) -> dict:
     return out
 
 
+def collective_schedule(hlo_text: str) -> list[dict]:
+    """Every collective op in program order: {kind, dtype, nbytes, group_size}.
+
+    Unlike :func:`collective_stats` (aggregates), this keeps the per-op
+    sequence so a bucketed gradient exchange can be audited op by op.
+    """
+    out = []
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind, rest = m.groups()
+        out.append({"kind": kind, "dtype": dtype,
+                    "nbytes": _nbytes(dtype, dims),
+                    "group_size": _group_size(rest)})
+    return out
+
+
+def bucket_audit(hlo_text: str, min_bytes: int = 0) -> dict:
+    """Audit the gradient-sync bucket schedule in compiled HLO.
+
+    Counts *independent reduction exchanges*: for the torus2d/ring/
+    hierarchical xla lowerings each bucket compiles to its own
+    reduce-scatter (+ all-reduce + all-gather) chain, and for psum to its
+    own all-reduce -- so ``num_exchanges = max(#reduce-scatter,
+    #all-reduce)`` over ops of at least ``min_bytes`` (filter out tiny
+    metric/loss psums with e.g. ``min_bytes=1024``). A fully fused sync
+    shows 1; a multi-bucket sync shows one per bucket, which is the
+    structural proof that XLA *can* overlap each exchange with remaining
+    backward compute.
+    """
+    sched = [op for op in collective_schedule(hlo_text)
+             if op["nbytes"] >= min_bytes]
+    by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for op in sched:
+        by_kind[op["kind"]]["count"] += 1
+        by_kind[op["kind"]]["bytes"] += op["nbytes"]
+    n_rs = by_kind["reduce-scatter"]["count"]
+    n_ar = by_kind["all-reduce"]["count"]
+    return {
+        "num_exchanges": max(n_rs, n_ar),
+        "by_kind": dict(by_kind),
+        "ops": sched,
+    }
+
+
 def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
     """Rough instruction histogram (op name -> count) for schedule audits."""
     counts: dict[str, int] = defaultdict(int)

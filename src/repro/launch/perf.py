@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
 from repro.configs.shapes import SHAPES
+from repro import compat
 from repro.launch import hlo_stats
 from repro.launch.mesh import (cache_pspecs, dp_axes_of, make_factorized_mesh,
                                make_production_mesh, param_pspecs,
@@ -40,7 +41,7 @@ def _measure(fn, args, *, step: str, label: str, n_blocks_pair=None) -> dict:
     t0 = time.time()
     compiled = fn.lower(*args).compile()
     dt = time.time() - t0
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     coll = hlo_stats.collective_stats(compiled.as_text())
     flops = ca.get("flops", 0.0)
     bytes_acc = ca.get("bytes accessed", 0.0)
@@ -76,7 +77,7 @@ def _measure(fn, args, *, step: str, label: str, n_blocks_pair=None) -> dict:
 
 def _extract_cost(fn, args):
     c = fn.lower(*args).compile()
-    ca = c.cost_analysis()
+    ca = compat.cost_analysis(c)
     coll = hlo_stats.collective_stats(c.as_text())
     return {"flops": ca.get("flops", 0.0),
             "bytes": ca.get("bytes accessed", 0.0),

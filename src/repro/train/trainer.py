@@ -4,7 +4,11 @@ One ``train_step`` =
     shard_map over the data-parallel axes (model axis stays XLA-auto):
       1. local forward/backward in compute dtype (bf16; paper: fp16)
       2. gradient exchange with the configured strategy
-         (2D-torus / ring / hierarchical / psum), bf16 buckets, fp32 for BN
+         (2D-torus / ring / hierarchical / psum), bf16 buckets, fp32 for BN;
+         ``TrainerConfig.grad_sync.bucket_bytes > 0`` splits the exchange
+         into size-targeted buckets issued in reverse-backprop order so XLA
+         overlaps each bucket with remaining backward compute
+         (docs/gradient_sync.md)
       3. LR + momentum from the schedule at the *fractional epoch*
       4. LARS update in fp32
 
@@ -22,8 +26,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import lars as lars_lib
 from repro.core import schedules as sched_lib

@@ -1,0 +1,87 @@
+"""``hypothesis`` if installed, else a minimal random-example fallback.
+
+CI installs real hypothesis (see requirements-dev.txt) and gets full
+shrinking/replay behaviour. Environments without it (the bare jax image)
+still collect and run every property test: the fallback draws
+``max_examples`` pseudo-random examples from a fixed seed, covering exactly
+the API surface this suite uses:
+
+    @settings(max_examples=N, deadline=None)
+    @given(x=st.integers(a, b), ...)        # keyword style only
+
+with strategies ``integers``, ``floats``, ``booleans``, ``lists``,
+``sampled_from``. Anything fancier should go through real hypothesis.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randint(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        del deadline
+
+        def deco(f):
+            f._hyp_max_examples = max_examples
+            return f
+        return deco
+
+    def given(**kw_strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                rng = np.random.RandomState(0xC0FFEE)
+                n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    f(*args, **drawn, **kwargs)
+
+            # hide the strategy-supplied params so pytest doesn't treat them
+            # as fixtures (real hypothesis does this via its pytest plugin)
+            sig = inspect.signature(f)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in kw_strategies])
+            return wrapper
+        return deco

@@ -4,9 +4,41 @@ Collective/grad-sync tests need >1 device, so we ask the CPU platform for 8
 host devices (cheap; NOT the 512-device production mesh -- that is only ever
 forced inside launch/dryrun.py, which runs as its own process). All tests are
 written to be device-count-agnostic given >= 8 devices.
+
+The XLA_FLAGS guard must run before jax initializes its backends, i.e.
+before any test module is imported -- conftest import time is early enough.
+Unlike a plain ``setdefault``, the guard also repairs an inherited
+XLA_FLAGS (e.g. from CI or a dev shell) that is missing the device-count
+flag, so the ``multidevice`` tests behave identically everywhere.
 """
 
 import os
+import sys
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+_DEVCOUNT_FLAG = "--xla_force_host_platform_device_count"
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if _DEVCOUNT_FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + " " if _flags else "") + \
+        f"{_DEVCOUNT_FLAG}=8"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# test modules import helpers (tests/_hyp.py) top-level; guarantee the tests
+# dir is importable regardless of pytest's import-mode/rootdir resolution
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip ``multidevice`` tests if the platform gave us fewer devices than
+    the simulated 8 (e.g. XLA_FLAGS was locked by an earlier jax init)."""
+    import jax
+    import pytest
+
+    if jax.device_count() >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs >=8 devices, have {jax.device_count()} "
+               f"(set XLA_FLAGS={_DEVCOUNT_FLAG}=8)")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)

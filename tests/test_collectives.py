@@ -11,11 +11,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import collectives
 from repro.core.topology import TorusGrid, factorize, select_grid
+
+pytestmark = pytest.mark.multidevice
 
 STRATEGIES = ["psum", "ring", "hierarchical", "torus2d"]
 LOWERINGS = ["xla", "ring"]

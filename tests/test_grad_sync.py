@@ -7,12 +7,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from _hyp import given, settings, strategies as st
+from repro.compat import shard_map
 
 from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core.topology import TorusGrid
+
+pytestmark = pytest.mark.multidevice
 
 MESH = None
 

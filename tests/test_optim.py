@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import lars, losses, schedules
 from repro.core.batch_control import build_plan, epoch_of

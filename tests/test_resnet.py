@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models import resnet
 
@@ -51,6 +52,7 @@ def test_collect_and_reuse_stats():
                                np.asarray(logits_eval), rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.multidevice
 def test_sync_bn_matches_global_batch():
     """SyncBN over the data axis == local BN over the concatenated batch."""
     mesh = jax.make_mesh((4,), ("data",))

@@ -35,6 +35,8 @@ def resnet_loss(cfg, smoothing):
     return loss_fn
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_resnet_paper_recipe_converges(mesh):
     cfg = resnet.ResNetConfig.tiny(num_classes=8)
     data = SyntheticImageNet(num_classes=8, image_size=32, noise=0.3)
@@ -64,6 +66,7 @@ def test_resnet_paper_recipe_converges(mesh):
     assert int(state.step) == 32
 
 
+@pytest.mark.multidevice
 def test_grad_sync_strategies_agree_end_to_end(mesh):
     """One step with torus2d == one step with psum (same data, fp32 comm)."""
     cfg = resnet.ResNetConfig.tiny(num_classes=4, compute_dtype=jnp.float32)
@@ -91,6 +94,8 @@ def test_grad_sync_strategies_agree_end_to_end(mesh):
                                        rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
+@pytest.mark.multidevice
 def test_transformer_lm_trains_with_recipe(mesh):
     """The paper's technique applied to an assigned arch (qwen3 smoke)."""
     from repro.configs import registry
