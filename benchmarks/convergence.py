@@ -16,7 +16,6 @@ assertion validated here: LS and LS+BSC both reach >= reference accuracy.
 
 from __future__ import annotations
 
-import functools
 import time
 
 import jax

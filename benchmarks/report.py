@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
 from benchmarks import roofline as R
 

@@ -19,8 +19,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import collectives
 from repro.core.topology import paper_table4_grid

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator
 
 from repro.core.schedules import BatchSchedule, BatchStage
 

@@ -26,8 +26,6 @@ sizes (see ``grad_sync.pad_to``).
 
 from __future__ import annotations
 
-import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

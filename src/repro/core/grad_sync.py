@@ -183,6 +183,121 @@ def sync_tree(grads, grid: TorusGrid, cfg: GradSyncConfig = GradSyncConfig()):
     return _sync_per_leaf(grads, grid, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Graceful degradation: strategy fallback chain (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+#: Ordered degradation chain per strategy (2d_torus -> ... -> ring -> psum).
+#: Later entries trade the paper's bandwidth-optimal schedule for
+#: robustness: hierarchical (xla lowering) is all-reduce-only so it lowers
+#: everywhere torus2d cannot, the flat ring is a single in-axis exchange
+#: XLA may reroute around a dead link, and psum is the native all-reduce
+#: that always lowers.
+FALLBACK_CHAINS: dict[str, tuple[str, ...]] = {
+    "torus2d": ("torus2d", "hierarchical", "ring", "psum"),
+    "hierarchical": ("hierarchical", "ring", "psum"),
+    "ring": ("ring", "psum"),
+    "psum": ("psum",),
+}
+
+
+def fallback_chain(strategy: str) -> tuple[str, ...]:
+    return FALLBACK_CHAINS.get(strategy, (strategy, "psum"))
+
+
+def _strategy_viable(strategy: str, lowering: str, grid: TorusGrid, mesh,
+                     manual_axes, down_axes=(), probe: bool = True):
+    """(viable, reason). ``reason`` explains the rejection when not viable.
+
+    Three checks, cheapest first:
+
+    1. *Down axes*: torus2d / hierarchical decompose the reduction into
+       per-axis phases that map onto physical link dimensions -- a down
+       torus axis kills them. The flat strategies (ring with the xla
+       lowering, psum) leave routing to the compiler/fabric and survive;
+       the explicit ppermute ring lowering pins neighbor links, so it is
+       rejected too.
+    2. *Partial-manual shard_map*: on jaxlib < 0.5 the SPMD partitioner
+       hard-aborts (uncatchable F-check) on scatter/gather/permute
+       collectives when some mesh axes stay auto
+       (``compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES``); only all-reduce-
+       only strategies (psum, xla-lowered hierarchical) are safe there.
+    3. *Trace probe*: a tiny ``jax.eval_shape`` of the strategy under the
+       real mesh/grid catches anything else (missing primitives, bad axis
+       factorization) without allocating or compiling. Only run when the
+       shard_map is fully manual -- see (2) for why probing partial-manual
+       combos is not safe.
+    """
+    down = set(down_axes) & set(grid.axes)
+    if down:
+        if strategy in ("torus2d", "hierarchical"):
+            return False, (f"torus axis(es) {sorted(down)} down: per-axis "
+                           "phase decomposition unavailable")
+        if lowering == "ring":
+            return False, (f"axis(es) {sorted(down)} down: explicit ppermute "
+                           "ring pins dead neighbor links")
+
+    manual = set(manual_axes)
+    partial = bool(set(mesh.axis_names) - manual)
+    if partial and not compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
+        ar_only = strategy == "psum" or (strategy == "hierarchical"
+                                         and lowering == "xla")
+        if not ar_only:
+            return False, ("partial-manual shard_map on this jaxlib only "
+                           "lowers all-reduce collectives (jax >= 0.5 "
+                           "needed for scatter/gather/permute)")
+
+    if probe and not partial:
+        try:
+            mult = 1
+            for a in grid.axes:
+                mult *= int(mesh.shape[a])
+
+            def _probe_sync(x):
+                return collectives.all_reduce(x, grid, strategy, lowering)
+
+            smapped = compat.shard_map(
+                _probe_sync, mesh=mesh,
+                in_specs=jax.sharding.PartitionSpec(),
+                out_specs=jax.sharding.PartitionSpec(),
+                axis_names=frozenset(manual), check_vma=False)
+            jax.eval_shape(
+                smapped, jax.ShapeDtypeStruct((mult,), jnp.float32))
+        except Exception as e:  # noqa: BLE001 -- any trace failure degrades
+            return False, f"trace probe failed: {type(e).__name__}: {e}"
+    return True, ""
+
+
+def resolve_sync_config(cfg: GradSyncConfig, grid: TorusGrid, mesh,
+                        manual_axes, down_axes=(), probe: bool = True
+                        ) -> tuple[GradSyncConfig, list[dict]]:
+    """Walk ``cfg.strategy``'s fallback chain; return the first viable
+    config plus the rejection/downgrade events (for history/logging).
+
+    Never raises: psum terminates every chain and always lowers. A
+    downgrade is an event, not an error -- the job keeps training
+    (docs/robustness.md).
+    """
+    events: list[dict] = []
+    chain = fallback_chain(cfg.strategy)
+    for strategy in chain:
+        ok, reason = _strategy_viable(strategy, cfg.lowering, grid, mesh,
+                                      manual_axes, down_axes, probe)
+        if ok:
+            if strategy != cfg.strategy:
+                events.append({
+                    "event": "grad_sync_downgrade",
+                    "from": cfg.strategy, "to": strategy,
+                })
+            return dataclasses.replace(cfg, strategy=strategy), events
+        events.append({"event": "grad_sync_strategy_rejected",
+                       "strategy": strategy, "reason": reason})
+    # unreachable in practice (psum has no rejection path), but never abort
+    events.append({"event": "grad_sync_downgrade",
+                   "from": cfg.strategy, "to": "psum"})
+    return dataclasses.replace(cfg, strategy="psum"), events
+
+
 def _sync_fused(grads, grid: TorusGrid, cfg: GradSyncConfig):
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(grads)
     if not leaves_p:

@@ -25,7 +25,6 @@ oracle-exact).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

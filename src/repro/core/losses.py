@@ -37,7 +37,6 @@ def label_smoothing_xent(logits: jax.Array, labels: jax.Array,
 def ls_xent_ref(logits: jax.Array, labels: jax.Array, smoothing: float) -> jax.Array:
     """Per-example smoothed NLL, pure jnp (oracle for the Pallas kernel)."""
     logits = logits.astype(jnp.float32)
-    k = logits.shape[-1]
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     mean_logp = logp.mean(axis=-1)

@@ -27,7 +27,6 @@ program -- same as the paper's NNL re-setup at stage boundaries).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax.numpy as jnp
 

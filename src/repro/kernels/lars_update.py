@@ -13,7 +13,6 @@ elementwise work, MXU-free, aligned to (8, 128) fp32 VREG tiles.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ to Mosaic. ``INTERPRET`` flips automatically off-TPU.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

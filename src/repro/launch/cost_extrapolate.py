@@ -28,10 +28,8 @@ import dataclasses
 import glob
 import json
 
-import jax
 
-from repro.configs import registry
-from repro.configs.shapes import SHAPES, long_context_variant
+from repro.configs.shapes import SHAPES
 from repro import compat
 from repro.launch import hlo_stats
 from repro.launch.mesh import make_production_mesh

@@ -19,7 +19,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
 import dataclasses
-import functools
 import json
 import time
 import traceback
@@ -30,12 +29,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs import registry
-from repro.configs.shapes import SHAPES, ShapeConfig, long_context_variant, needs_long_variant
+from repro.configs.shapes import SHAPES, ShapeConfig, long_context_variant
+from repro.core import grad_sync as grad_sync_lib
 from repro.core import losses
 from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core import lars as lars_lib
 from repro.core.topology import select_grid
 from repro.launch import hlo_stats
+from repro.testing.chaos import FaultPlan
 from repro.launch.mesh import (cache_pspecs, dp_axes_of, make_production_mesh,
                                param_pspecs, with_shardings)
 from repro.models import transformer as T
@@ -47,19 +48,10 @@ FSDP_ARCHS = {"llama-3.2-vision-90b", "kimi-k2-1t-a32b", "llama3-405b",
               "gemma2-27b"}
 
 
-def effective_sync_strategy(strategy: str) -> str:
-    """Downgrade strategies that old jaxlib cannot lower on this path.
-
-    The non-FSDP train step runs grad sync inside a partial-manual
-    shard_map (model axis stays auto); on jax < 0.5 the SPMD partitioner
-    check-fails on the scatter/gather/permute collectives of the torus2d
-    and ring schedules there (compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES).
-    psum and the xla hierarchical lowering only emit all-reduces and
-    compile fine -- downgrade and record it rather than abort the audit.
-    """
-    if compat.SUPPORTS_PARTIAL_MANUAL_COLLECTIVES:
-        return strategy
-    return strategy if strategy in ("psum", "hierarchical") else "hierarchical"
+# Strategy degradation (old-jaxlib partial-manual lowering limits, injected
+# torus-link faults) is handled by the shared fallback chain in
+# repro.core.grad_sync.resolve_sync_config; build_train records the
+# resolved strategy + downgrade events and run_one writes them to the JSON.
 
 
 def sds(shape, dtype, mesh=None, spec=None):
@@ -96,7 +88,8 @@ def _vision_sds(cfg, batch, mesh, dp):
 # ---------------------------------------------------------------------------
 
 def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
-                fuse=None, bucket_bytes=0):
+                fuse=None, bucket_bytes=0, down_axes=()):
+    sync_info = {"effective": None, "events": []}
     dp = dp_axes_of(mesh)
     fsdp = arch_id in FSDP_ARCHS
     params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
@@ -138,10 +131,18 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         grid = select_grid(dp)
         # bucket_bytes only changes the schedule on the fused (pure-DP)
         # path; per-leaf sync is already one exchange per leaf.
-        gcfg = GradSyncConfig(strategy=effective_sync_strategy(sync_strategy),
+        gcfg = GradSyncConfig(strategy=sync_strategy,
                               fuse=False if fuse is None else fuse,
                               comm_dtype=comm_dtype,
                               bucket_bytes=bucket_bytes)
+        # graceful degradation: partial-manual shard_map (model axis auto)
+        # limits old jaxlib to all-reduce-only schedules, and injected
+        # torus-link faults (--inject-faults) kill the per-axis phase
+        # decompositions -- downgrade along the chain and record it
+        # rather than abort the audit (docs/robustness.md).
+        gcfg, sync_events = grad_sync_lib.resolve_sync_config(
+            gcfg, grid, mesh, dp, down_axes=down_axes, probe=False)
+        sync_info = {"effective": gcfg.strategy, "events": sync_events}
 
         def step(params, mom, tokens, labels, vision):
             loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
@@ -160,7 +161,7 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         fn = jax.jit(smapped)
 
     # vision=None is an empty pytree: jit/shard_map treat it transparently
-    return fn, (params_sds, mom_sds, tokens, labels, vision)
+    return fn, (params_sds, mom_sds, tokens, labels, vision), sync_info
 
 
 def build_prefill(arch_id, cfg, shape, mesh):
@@ -205,12 +206,15 @@ def build_decode(arch_id, cfg, shape, mesh):
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             sync_strategy: str = "torus2d", out_dir: str = "experiments/dryrun",
-            save: bool = True, quiet: bool = False, bucket_bytes: int = 0) -> dict:
+            save: bool = True, quiet: bool = False, bucket_bytes: int = 0,
+            fault_plan: FaultPlan | None = None) -> dict:
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     cfg = arch_for(arch_id, shape)
+    down_axes = tuple(fault_plan.down_axes) if fault_plan is not None else ()
 
+    sync_info = {"effective": None, "events": []}
     t0 = time.time()
     if shape.step == "train":
         if arch_id not in FSDP_ARCHS and \
@@ -223,8 +227,10 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
                 "support (jax >= 0.5); this jaxlib's SPMD partitioner "
                 "aborts the process on it. FSDP archs and prefill/decode "
                 "shapes are unaffected (see repro/compat.py).")
-        fn, args = build_train(arch_id, cfg, shape, mesh, sync_strategy,
-                               bucket_bytes=bucket_bytes)
+        fn, args, sync_info = build_train(arch_id, cfg, shape, mesh,
+                                          sync_strategy,
+                                          bucket_bytes=bucket_bytes,
+                                          down_axes=down_axes)
     elif shape.step == "prefill":
         fn, args = build_prefill(arch_id, cfg, shape, mesh)
     else:
@@ -247,9 +253,10 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
         "step": shape.step, "chips": int(n_chips),
         "fsdp": arch_id in FSDP_ARCHS,
         "sync_strategy": sync_strategy if shape.step == "train" else None,
-        "sync_strategy_effective": (effective_sync_strategy(sync_strategy)
-                                    if shape.step == "train" and
-                                    arch_id not in FSDP_ARCHS else None),
+        "sync_strategy_effective": sync_info["effective"],
+        "sync_downgrade_events": sync_info["events"] or None,
+        "fault_injection": ({"down_axes": list(down_axes)}
+                            if down_axes else None),
         "bucket_bytes": bucket_bytes if shape.step == "train" else None,
         "bucket_audit": (hlo_stats.bucket_audit(hlo, min_bytes=1024)["by_kind"]
                          if shape.step == "train" else None),
@@ -297,6 +304,12 @@ def main():
     ap.add_argument("--bucket-bytes", type=int, default=0,
                     help="gradient-sync bucket size target; 0 = single fused "
                          "buffer (see docs/gradient_sync.md)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="mark the leading DP torus axis down "
+                         "(testing/chaos.FaultPlan): the grad-sync strategy "
+                         "must degrade along the fallback chain instead of "
+                         "aborting; events land in the JSON "
+                         "(docs/robustness.md)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -323,8 +336,15 @@ def main():
                           "jax >= 0.5 on this jaxlib")
                     continue
                 try:
+                    fault_plan = None
+                    if args.inject_faults:
+                        # down the leading DP axis: the slow inter-pod axis
+                        # on the 2-pod mesh, the whole data ring otherwise
+                        mesh_dp = ("pod", "data") if mp else ("data",)
+                        fault_plan = FaultPlan(down_axes=(mesh_dp[0],))
                     run_one(arch_id, shape_name, mp, args.sync, args.out,
-                            bucket_bytes=args.bucket_bytes)
+                            bucket_bytes=args.bucket_bytes,
+                            fault_plan=fault_plan)
                 except Exception as e:  # noqa: BLE001
                     failures.append((arch_id, shape_name, mp, repr(e)))
                     print(f"[FAIL] {arch_id} {shape_name} multi_pod={mp}: {e}")

@@ -15,13 +15,11 @@ leading (n_blocks,) dim -> specs are right-aligned against leaf rank.
 
 from __future__ import annotations
 
-import functools
 import re
-from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False):

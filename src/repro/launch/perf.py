@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import registry
 from repro.configs.shapes import SHAPES
 from repro import compat
 from repro.launch import hlo_stats

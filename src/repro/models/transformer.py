@@ -22,7 +22,6 @@ Three entry points:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

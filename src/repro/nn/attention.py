@@ -12,8 +12,6 @@ shape (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

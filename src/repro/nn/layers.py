@@ -10,7 +10,6 @@ LARS statistics in fp32).
 
 from __future__ import annotations
 
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,3 @@
+"""Test-support subsystem: deterministic fault injection (chaos testing)."""
+
+from repro.testing.chaos import FaultPlan, TransientDataError  # noqa: F401

@@ -1,0 +1,151 @@
+"""Deterministic fault injection for the fault-tolerant training loop.
+
+At the paper's scale (2,176 GPUs, 122-second runs) transient faults are the
+norm: a half-precision gradient overflows, a data worker hiccups, a node
+dies mid-checkpoint, a torus link drops. None of those may abort the job.
+This module *simulates* each fault class deterministically so every
+recovery path in ``Trainer`` / ``checkpoint`` / ``grad_sync`` is
+exercisable in CI on the 8-device CPU mesh (docs/robustness.md).
+
+A :class:`FaultPlan` is pure configuration plus a little bookkeeping for
+"fail the first N attempts" semantics. The trainer consults it at three
+points:
+
+* ``corrupt_batch(step, batch)``  -- poisons float leaves of the batch with
+  NaN/Inf at the chosen steps, which drives non-finite losses/gradients
+  through the *real* forward/backward/sync pipeline (exactly how an fp16
+  overflow presents), exercising the in-step guard.
+* ``wrap_data_fn(data_fn)``       -- raises :class:`TransientDataError`
+  from the data function for the first ``data_failures_per_step`` attempts
+  at the chosen steps, exercising the retry-with-backoff path.
+* ``checkpoint_io_hook``          -- passed to ``checkpoint.save``; raises
+  ``OSError`` mid-write (after the payload bytes, before the atomic
+  rename) for the chosen save indices, exercising crash-consistency and
+  the save retry loop.
+
+``down_axes`` marks mesh axes of the logical torus as "down"; the
+strategy-fallback chain in ``grad_sync.resolve_sync_config`` then refuses
+strategies whose phase decomposition depends on those axes and degrades
+(torus2d -> ring -> psum) instead of aborting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TransientDataError(RuntimeError):
+    """A data-pipeline failure that is expected to succeed on retry."""
+
+
+#: Exception classes the trainer treats as retryable when fetching a batch.
+RETRYABLE = (TransientDataError, OSError, TimeoutError)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded, deterministic schedule of injected faults.
+
+    Steps are *global* step indices (``StagePlan.first_step + i``), so a
+    plan replays identically across resumes. Instances carry attempt
+    counters, so use a fresh plan per training run.
+    """
+
+    seed: int = 0
+    nan_grad_steps: tuple[int, ...] = ()     # batch poisoned with NaN
+    inf_grad_steps: tuple[int, ...] = ()     # batch poisoned with +Inf
+    data_fail_steps: tuple[int, ...] = ()    # data_fn raises (transient)
+    data_failures_per_step: int = 1          # consecutive failures per step
+    ckpt_crash_writes: tuple[int, ...] = ()  # save indices crashed mid-file
+    ckpt_crashes_per_write: int = 1          # consecutive crashes per save
+    down_axes: tuple[str, ...] = ()          # torus mesh axes marked down
+
+    def __post_init__(self):
+        self._data_attempts: dict[int, int] = {}
+        self._ckpt_save_idx = -1
+
+    # -- gradient corruption ------------------------------------------------
+
+    def corrupt_batch(self, step: int, batch):
+        """Poison one element of every float leaf at a faulted step.
+
+        A single non-finite input element is enough: it propagates through
+        the forward pass to the loss and from there into every gradient
+        leaf, which is how a real reduced-precision overflow presents after
+        the all-reduce.
+        """
+        if step in self.nan_grad_steps:
+            val = float("nan")
+        elif step in self.inf_grad_steps:
+            val = float("inf")
+        else:
+            return batch
+
+        def poison(leaf):
+            leaf = jnp.asarray(leaf)
+            if not jnp.issubdtype(leaf.dtype, jnp.floating) or leaf.size == 0:
+                return leaf
+            idx = (self.seed + step) % leaf.size
+            return jnp.ravel(leaf).at[idx].set(val).reshape(leaf.shape)
+
+        return jax.tree.map(poison, batch)
+
+    # -- transient data failures --------------------------------------------
+
+    def wrap_data_fn(self, data_fn):
+        """Wrap ``data_fn(step, global_batch)`` with injected transient
+        failures: the first ``data_failures_per_step`` calls at each step in
+        ``data_fail_steps`` raise, subsequent calls pass through."""
+
+        def wrapped(step, global_batch):
+            if step in self.data_fail_steps:
+                n = self._data_attempts.get(step, 0)
+                if n < self.data_failures_per_step:
+                    self._data_attempts[step] = n + 1
+                    raise TransientDataError(
+                        f"injected data failure at step {step} "
+                        f"(attempt {n + 1}/{self.data_failures_per_step})")
+            return data_fn(step, global_batch)
+
+        return wrapped
+
+    # -- checkpoint-write crashes -------------------------------------------
+
+    def checkpoint_io_hook(self, phase: str, attempt: int) -> None:
+        """IO hook for ``checkpoint.save`` (phases: begin/payload/manifest).
+
+        Crashes the ``payload`` phase -- bytes written to the tmp file but
+        not yet durable/renamed -- of save number ``i`` for every ``i`` in
+        ``ckpt_crash_writes``, for the first ``ckpt_crashes_per_write``
+        attempts. The atomic-write protocol must leave either the previous
+        complete checkpoint or nothing.
+        """
+        if phase == "begin":
+            if attempt == 0:
+                self._ckpt_save_idx += 1
+            return
+        if phase != "payload":
+            return
+        if (self._ckpt_save_idx in self.ckpt_crash_writes
+                and attempt < self.ckpt_crashes_per_write):
+            raise OSError(
+                f"injected checkpoint-write crash (save "
+                f"#{self._ckpt_save_idx}, attempt {attempt})")
+
+    # -- convenience --------------------------------------------------------
+
+    @staticmethod
+    def random(seed: int, total_steps: int, *, p_nan: float = 0.05,
+               p_data: float = 0.05, n_ckpt_crashes: int = 1) -> "FaultPlan":
+        """A random-but-reproducible plan (seeded numpy RNG)."""
+        rng = np.random.default_rng(seed)
+        steps = np.arange(total_steps)
+        nan_steps = tuple(int(s) for s in steps[rng.random(total_steps) < p_nan])
+        data_steps = tuple(int(s) for s in steps[rng.random(total_steps) < p_data])
+        return FaultPlan(seed=seed, nan_grad_steps=nan_steps,
+                         data_fail_steps=data_steps,
+                         ckpt_crash_writes=tuple(range(n_ckpt_crashes)))

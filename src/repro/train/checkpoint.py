@@ -1,16 +1,40 @@
-"""Checkpointing: flat-leaf npz with path-keyed entries.
+"""Crash-consistent checkpointing: atomic npz + CRC manifest sidecar.
 
-Works for any pytree of arrays (params, LARS momentum, step). Arrays are
-gathered to host (fine at the scales this container runs; on a real pod
-each host writes its own shard -- the path-keyed format is already
-per-leaf, so sharded writes are a straightforward extension).
+Format (docs/robustness.md):
+
+* ``<name>.npz``           -- flat path-keyed leaves (params, LARS momentum,
+  step, guard state). Works for any pytree of arrays; leaves are gathered
+  to host (fine at this container's scale; on a real pod each host writes
+  its own shard -- the path-keyed format is already per-leaf).
+* ``<name>.manifest.json`` -- sidecar carrying format version, step,
+  optional trainer metadata (stage info), and per-leaf CRC32/shape/dtype.
+
+Commit protocol: payload is written to a tmp file, fsync'd, and
+``os.replace``'d into place; the manifest follows the same tmp+fsync+rename
+dance *after* the payload rename. The manifest is therefore the commit
+record -- an npz without a manifest is an uncommitted torso (a crash
+between the two renames) and is ignored by ``latest``/``latest_valid``.
+A crash at any point leaves either the previous complete checkpoint or a
+new complete one, never a half-written file under a committed name.
+
+``save`` retries transient IO errors with exponential backoff and prunes
+to ``keep_last`` checkpoints (step-ordered). ``latest`` orders by *step*
+parsed from the manifest (filename fallback) -- never by mtime, which lies
+for copied/restored files. ``restore`` verifies CRCs and shapes and raises
+:class:`CheckpointCorruptError` with the offending leaf; ``latest_valid``
+walks candidates newest-first and returns the first that passes
+validation, so a corrupt newest checkpoint falls back to the previous
+valid one instead of killing the job.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
-from typing import Any
+import time
+import zlib
+from typing import Callable
 
 import jax
 import numpy as np
@@ -18,6 +42,22 @@ import numpy as np
 from repro.train.state import TrainState
 
 _SEP = "::"
+MANIFEST_SUFFIX = ".manifest.json"
+FORMAT_VERSION = 1
+_STEP_RE = re.compile(r"step_(\d+)")
+
+#: Guard-state scalars added after the first checkpoint format; restored
+#: with these defaults when absent so old checkpoints keep loading.
+_OPTIONAL_SCALARS = {"loss_scale": (1.0, np.float32),
+                     "good_steps": (0, np.int32)}
+
+
+class CheckpointError(RuntimeError):
+    """Checkpoint IO failed (after retries)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """The checkpoint on disk is truncated, tampered, or incomplete."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -29,45 +69,264 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return out
 
 
-def save(directory: str, state: TrainState, name: str = "ckpt") -> str:
-    os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"{name}.npz")
+def _payload_of(state: TrainState) -> dict[str, np.ndarray]:
     payload = {}
     for prefix, tree in (("params", state.params),
                          ("opt", state.opt_state)):
         for k, v in _flatten(tree).items():
             payload[f"{prefix}{_SEP}{k}"] = v
     payload["step"] = np.asarray(state.step)
-    np.savez(path, **payload)
+    payload["loss_scale"] = np.asarray(state.loss_scale)
+    payload["good_steps"] = np.asarray(state.good_steps)
+    return payload
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def manifest_path(path: str) -> str:
+    return path[: -len(".npz")] + MANIFEST_SUFFIX if path.endswith(".npz") \
+        else path + MANIFEST_SUFFIX
+
+
+def _atomic_write(path: str, write_fn: Callable, io_hook=None,
+                  hook_phase: str = "", attempt: int = 0) -> None:
+    """tmp + (hook) + fsync + rename. The hook fires after the bytes are
+    written but before they are durable -- the crash window fault injection
+    targets (testing/chaos.py)."""
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            if io_hook is not None:
+                io_hook(hook_phase, attempt)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+def save(directory: str, state: TrainState, name: str | None = None, *,
+         retries: int = 3, backoff_s: float = 0.05, keep_last: int = 0,
+         meta: dict | None = None, io_hook=None, on_retry=None) -> str:
+    """Atomically write ``state`` and its manifest; returns the npz path.
+
+    ``io_hook(phase, attempt)`` (phases ``begin``/``payload``/``manifest``)
+    may raise to simulate a crash; OSErrors are retried ``retries`` times
+    with exponential backoff starting at ``backoff_s``, reporting each
+    failed attempt to ``on_retry(attempt, exc)``. ``keep_last > 0`` prunes
+    to the newest K checkpoints by step after a successful write.
+    """
+    os.makedirs(directory, exist_ok=True)
+    step = int(state.step)
+    name = name or f"step_{step:08d}"
+    path = os.path.join(directory, f"{name}.npz")
+    payload = _payload_of(state)
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "step": step,
+        "name": name,
+        "meta": meta or {},
+        "leaves": {k: {"crc32": _crc(v), "shape": list(v.shape),
+                       "dtype": str(v.dtype), "nbytes": int(v.nbytes)}
+                   for k, v in payload.items()},
+    }
+
+    delay = backoff_s
+    for attempt in range(retries + 1):
+        try:
+            if io_hook is not None:
+                io_hook("begin", attempt)
+            _atomic_write(path, lambda f: np.savez(f, **payload),
+                          io_hook, "payload", attempt)
+            _atomic_write(manifest_path(path),
+                          lambda f: f.write(json.dumps(manifest).encode()),
+                          io_hook, "manifest", attempt)
+            break
+        except OSError as e:
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if attempt >= retries:
+                raise CheckpointError(
+                    f"checkpoint write failed after {retries + 1} attempts: "
+                    f"{e}") from e
+            time.sleep(delay)
+            delay *= 2
+    if keep_last > 0:
+        _prune(directory, keep_last)
     return path
 
 
-def restore(path: str, like: TrainState) -> TrainState:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
-    with np.load(path) as data:
+def load_manifest(path: str) -> dict | None:
+    mp = manifest_path(path)
+    if not os.path.exists(mp):
+        return None
+    try:
+        with open(mp) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def validate(path: str, like: TrainState | None = None) -> dict:
+    """Full integrity check; returns the manifest or raises
+    :class:`CheckpointCorruptError` naming what is wrong."""
+    if not os.path.exists(path):
+        raise CheckpointCorruptError(f"{path}: missing")
+    manifest = load_manifest(path)
+    if manifest is None:
+        raise CheckpointCorruptError(
+            f"{path}: missing/unreadable manifest sidecar "
+            f"({manifest_path(path)}) -- uncommitted or pre-manifest write")
+    try:
+        with np.load(path) as data:
+            for key, info in manifest["leaves"].items():
+                if key not in data:
+                    raise CheckpointCorruptError(
+                        f"{path}: leaf {key!r} listed in manifest but "
+                        "missing from payload")
+                arr = data[key]
+                if list(arr.shape) != info["shape"]:
+                    raise CheckpointCorruptError(
+                        f"{path}: leaf {key!r} shape {list(arr.shape)} != "
+                        f"manifest {info['shape']}")
+                if _crc(arr) != info["crc32"]:
+                    raise CheckpointCorruptError(
+                        f"{path}: leaf {key!r} CRC mismatch (bit rot or "
+                        "torn write)")
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:  # zipfile/np errors on truncated archives
+        raise CheckpointCorruptError(
+            f"{path}: unreadable payload ({type(e).__name__}: {e})") from e
+    if like is not None:
+        _check_structure(path, manifest, like)
+    return manifest
+
+
+def _check_structure(path: str, manifest: dict, like: TrainState) -> None:
+    expected: dict[str, tuple[int, ...]] = {}
+    for prefix, tree in (("params", like.params), ("opt", like.opt_state)):
+        for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            key = f"{prefix}{_SEP}" + _SEP.join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            expected[key] = tuple(leaf.shape)
+    for key, shape in expected.items():
+        info = manifest["leaves"].get(key)
+        if info is None:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {key!r} required by the target state is "
+                "absent")
+        if tuple(info["shape"]) != shape:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {key!r} shape {tuple(info['shape'])} != "
+                f"target {shape}")
+
+
+def restore(path: str, like: TrainState, check: bool = True) -> TrainState:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``check=True`` (default) verifies the manifest + CRC32 of every leaf
+    first and raises :class:`CheckpointCorruptError` on any mismatch.
+    """
+    if check:
+        validate(path, like)
+    try:
+        npz = np.load(path)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{path}: unreadable payload ({type(e).__name__}: {e})") from e
+    with npz as data:
         def fill(prefix, tree):
-            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            flat, _ = jax.tree_util.tree_flatten_with_path(tree)
             leaves = []
             for p, leaf in flat:
                 key = prefix + _SEP + _SEP.join(
                     str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+                if key not in data:
+                    raise CheckpointCorruptError(
+                        f"{path}: missing leaf {key!r}")
                 arr = data[key]
                 if arr.shape != leaf.shape:
-                    raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+                    raise CheckpointCorruptError(
+                        f"{path}: {key}: shape {arr.shape} != {leaf.shape}")
                 leaves.append(arr.astype(leaf.dtype))
             return jax.tree_util.tree_unflatten(
                 jax.tree_util.tree_structure(tree), leaves)
 
+        def scalar(key):
+            if key in data:
+                return jax.numpy.asarray(data[key])
+            default, dtype = _OPTIONAL_SCALARS[key]
+            return jax.numpy.asarray(default, dtype)
+
         return TrainState(params=fill("params", like.params),
                           opt_state=fill("opt", like.opt_state),
-                          step=jax.numpy.asarray(data["step"]))
+                          step=jax.numpy.asarray(data["step"]),
+                          loss_scale=scalar("loss_scale"),
+                          good_steps=scalar("good_steps"))
+
+
+def _candidates(directory: str) -> list[tuple[int, str]]:
+    """(step, path) for every committed-looking npz, step-ordered ascending.
+
+    Step comes from the manifest; for manifest-less files (legacy format)
+    fall back to the ``step_NNN`` filename convention, then to mtime order
+    as a last resort (legacy behavior, kept so old dirs still resolve).
+    """
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for f in sorted(os.listdir(directory)):
+        if not f.endswith(".npz"):
+            continue
+        path = os.path.join(directory, f)
+        manifest = load_manifest(path)
+        if manifest is not None:
+            step = int(manifest.get("step", -1))
+        else:
+            m = _STEP_RE.search(f)
+            # mtime as a sub-second ordinal only breaks ties among
+            # legacy files that encode no step at all
+            step = int(m.group(1)) if m else -1
+        out.append((step, path))
+    out.sort(key=lambda t: (t[0], os.path.getmtime(t[1]), t[1]))
+    return out
 
 
 def latest(directory: str) -> str | None:
-    if not os.path.isdir(directory):
-        return None
-    cands = [f for f in os.listdir(directory) if f.endswith(".npz")]
-    if not cands:
-        return None
-    cands.sort(key=lambda f: os.path.getmtime(os.path.join(directory, f)))
-    return os.path.join(directory, cands[-1])
+    """Newest checkpoint by *step* (manifest-ordered, never mtime)."""
+    cands = _candidates(directory)
+    return cands[-1][1] if cands else None
+
+
+def latest_valid(directory: str, like: TrainState | None = None,
+                 on_skip: Callable[[str, str], None] | None = None
+                 ) -> str | None:
+    """Newest checkpoint that passes full validation, walking backwards
+    over corrupt/incomplete ones. ``on_skip(path, reason)`` observes each
+    rejected candidate (the trainer logs these as recovery events)."""
+    for step, path in reversed(_candidates(directory)):
+        try:
+            validate(path, like)
+            return path
+        except CheckpointCorruptError as e:
+            if on_skip is not None:
+                on_skip(path, str(e))
+    return None
+
+
+def _prune(directory: str, keep_last: int) -> None:
+    """Delete all but the newest ``keep_last`` checkpoints (by step)."""
+    for _, path in _candidates(directory)[:-keep_last]:
+        for p in (path, manifest_path(path)):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass

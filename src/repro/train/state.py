@@ -1,4 +1,6 @@
-"""Train state: fp32 master params + LARS momentum + step counter."""
+"""Train state: fp32 master params + LARS momentum + step counter, plus the
+dynamic loss-scale guard state (scale + clean-step counter) used by the
+non-finite-gradient guard in ``trainer.make_train_step``."""
 
 from __future__ import annotations
 
@@ -17,8 +19,18 @@ class TrainState:
     params: Any
     opt_state: Any
     step: jax.Array
+    # reduced-precision guard state (docs/robustness.md): the loss is
+    # multiplied by ``loss_scale`` before backward and the synced grads are
+    # unscaled; the scale backs off on non-finite steps and regrows after
+    # GuardConfig.growth_interval consecutive clean steps (``good_steps``).
+    loss_scale: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.ones((), jnp.float32))
+    good_steps: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
     @staticmethod
-    def create(params) -> "TrainState":
+    def create(params, loss_scale: float = 1.0) -> "TrainState":
         return TrainState(params=params, opt_state=lars.init(params),
-                          step=jnp.zeros((), jnp.int32))
+                          step=jnp.zeros((), jnp.int32),
+                          loss_scale=jnp.asarray(loss_scale, jnp.float32),
+                          good_steps=jnp.zeros((), jnp.int32))

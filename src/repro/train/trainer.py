@@ -1,41 +1,78 @@
-"""The distributed trainer: the paper's full recipe wired together.
+"""The distributed trainer: the paper's full recipe wired together,
+hardened for faults (docs/robustness.md).
 
 One ``train_step`` =
     shard_map over the data-parallel axes (model axis stays XLA-auto):
-      1. local forward/backward in compute dtype (bf16; paper: fp16)
+      1. local forward/backward in compute dtype (bf16; paper: fp16),
+         loss multiplied by the dynamic loss scale
       2. gradient exchange with the configured strategy
          (2D-torus / ring / hierarchical / psum), bf16 buckets, fp32 for BN;
          ``TrainerConfig.grad_sync.bucket_bytes > 0`` splits the exchange
          into size-targeted buckets issued in reverse-backprop order so XLA
          overlaps each bucket with remaining backward compute
          (docs/gradient_sync.md)
-      3. LR + momentum from the schedule at the *fractional epoch*
-      4. LARS update in fp32
+      3. non-finite guard: an all-finite flag over the pmean'd loss and
+         every synced gradient leaf gates the update -- params and momentum
+         pass through unchanged on a non-finite step and the loss scale
+         backs off (recovering after ``GuardConfig.growth_interval`` clean
+         steps)
+      4. LR + momentum from the schedule at the *fractional epoch*
+      5. LARS update in fp32
 
-The ``Trainer`` loops over the batch-size-control stages (paper §2.1),
-jitting one step per stage shape, and checkpoints at stage boundaries.
+The ``Trainer`` loops over the batch-size-control stages (paper §2.1) with
+ONE step function (jit re-specializes per stage batch shape), retries
+transient data failures with exponential backoff, writes crash-consistent
+checkpoints periodically and at stage boundaries, resumes mid-stage from
+the newest *valid* checkpoint, and degrades the grad-sync strategy
+(torus2d -> ring -> psum) instead of aborting when the configured one
+cannot run on the current mesh/jaxlib (or a torus axis is down). Faults
+are injectable via ``repro.testing.chaos.FaultPlan`` for chaos testing.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 
+from repro.core import grad_sync as grad_sync_lib
 from repro.core import lars as lars_lib
 from repro.core import schedules as sched_lib
-from repro.core.batch_control import TrainPlan, build_plan, epoch_of
+from repro.core.batch_control import TrainPlan, epoch_of
 from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core.topology import TorusGrid, select_grid
+from repro.testing.chaos import RETRYABLE
+from repro.train import checkpoint
 from repro.train.state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Non-finite-gradient guard + dynamic loss scale (paper trains in
+    reduced precision; this is the standard overflow guard).
+
+    Defaults are bf16-friendly (scale 1.0 -- bf16 shares fp32's exponent
+    range, so scaling only matters after a fault); an fp16 run would start
+    at ``init_scale=2**15``. With ``init_scale=1.0`` and no faults the
+    guarded step is bit-identical to an unguarded one (multiply by exactly
+    1.0, select-on-True), so enabling the guard costs no reproducibility.
+    """
+
+    enabled: bool = True
+    init_scale: float = 1.0
+    growth_interval: int = 200    # clean steps before the scale regrows
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5   # applied on every skipped step
+    max_scale: float = 2.0 ** 15
+    min_scale: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,8 +81,15 @@ class TrainerConfig:
     label_smoothing: float = 0.1
     grad_sync: GradSyncConfig = GradSyncConfig()
     lars: lars_lib.LARSConfig = lars_lib.LARSConfig()
+    guard: GuardConfig = GuardConfig()
     aux_weight: float = 0.01            # MoE load-balance weight
     log_every: int = 10
+    # fault tolerance (docs/robustness.md)
+    ckpt_every_steps: int = 0           # 0: stage boundaries only
+    ckpt_keep_last: int = 3
+    ckpt_retries: int = 3
+    data_retries: int = 3
+    retry_backoff_s: float = 0.05       # base of the exponential backoff
 
 
 def make_train_step(loss_fn: Callable, mesh, dp_axes: tuple[str, ...],
@@ -56,32 +100,80 @@ def make_train_step(loss_fn: Callable, mesh, dp_axes: tuple[str, ...],
     ``loss_fn(params, batch, dp_axes) -> (loss, aux)`` computes the LOCAL
     (per-shard) mean loss; ``batch`` is the local shard inside shard_map.
     ``aux`` is an extra scalar loss term already locally averaged.
+
+    The returned fn is batch-shape-polymorphic: jit re-specializes per
+    stage shape, so ONE call to this builder serves every stage of a
+    batch-size-control plan.
     """
     grid = grid or select_grid(dp_axes)
     schedule = sched_lib.make(cfg.schedule)
+    guard = cfg.guard
 
     def step(state: TrainState, batch, epoch, global_batch):
+        scale = state.loss_scale
+
         def total_loss(p):
             loss, aux = loss_fn(p, batch, dp_axes)
-            return loss + cfg.aux_weight * aux, (loss, aux)
+            tot = loss + cfg.aux_weight * aux
+            if guard.enabled:
+                tot = tot * scale.astype(tot.dtype)
+            return tot, (loss, aux)
 
-        (tot, (loss, aux)), grads = jax.value_and_grad(
+        (_, (loss, aux)), grads = jax.value_and_grad(
             total_loss, has_aux=True)(state.params)
         grads = sync_tree(grads, grid, cfg.grad_sync)
+        if guard.enabled:
+            inv = 1.0 / scale   # exact for the power-of-two scales we use
+            grads = jax.tree.map(lambda g: g * inv.astype(g.dtype), grads)
+
+        loss_m = jax.lax.pmean(loss, dp_axes)
+        # all-finite flag over loss + synced grads: the all-reduce already
+        # propagated any shard's NaN/Inf to every shard, so the flag (and
+        # the skip decision) is identical across the mesh.
+        nonfinite = sum(
+            jnp.sum(~jnp.isfinite(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+        finite = jnp.isfinite(loss_m) & (nonfinite == 0)
+
         lr = schedule.lr(epoch)
         mom = schedule.mom(epoch, global_batch)
         new_params, new_opt = lars_lib.update(
             state.params, grads, state.opt_state, lr=lr, momentum=mom,
             cfg=cfg.lars)
+
+        if guard.enabled:
+            # skip the update on non-finite steps: params/momentum pass
+            # through unchanged (jnp.where selects bit-exactly on True)
+            sel = functools.partial(jnp.where, finite)
+            new_params = jax.tree.map(sel, new_params, state.params)
+            new_opt = jax.tree.map(sel, new_opt, state.opt_state)
+            good = jnp.where(finite, state.good_steps + 1, 0)
+            grow = finite & (good >= guard.growth_interval)
+            new_scale = jnp.where(
+                finite,
+                jnp.where(grow,
+                          jnp.minimum(scale * guard.growth_factor,
+                                      guard.max_scale),
+                          scale),
+                jnp.maximum(scale * guard.backoff_factor, guard.min_scale))
+            good = jnp.where(grow, 0, good).astype(jnp.int32)
+        else:
+            new_scale, good = state.loss_scale, state.good_steps
+
         metrics = {
-            "loss": jax.lax.pmean(loss, dp_axes),
+            "loss": loss_m,
             "aux": jax.lax.pmean(aux, dp_axes),
             "lr": lr, "momentum": mom,
             "grad_norm": jnp.sqrt(sum(
                 jnp.sum(g.astype(jnp.float32) ** 2)
                 for g in jax.tree.leaves(grads))),
+            "skipped": (~finite).astype(jnp.int32),
+            "nonfinite_count": nonfinite.astype(jnp.int32),
+            "loss_scale": new_scale,
         }
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+        new_state = TrainState(new_params, new_opt, state.step + 1,
+                               new_scale, good)
+        return new_state, metrics
 
     # shard_map: manual over DP axes, auto over whatever else (model axis)
     manual = set(dp_axes)
@@ -103,36 +195,141 @@ class Trainer:
     plan: TrainPlan
     data_fn: Callable                  # (step_index, global_batch) -> batch
     checkpoint_dir: str | None = None
+    fault_plan: Any | None = None      # repro.testing.chaos.FaultPlan
 
     def run(self, state: TrainState, max_steps: int | None = None,
-            log: Callable = print):
-        history = []
-        step_fns = {}
-        total = 0
+            log: Callable = print, resume: bool = False):
+        """Run the plan. Returns ``(state, history)``.
+
+        ``history`` holds per-step metric rows (every ``log_every`` steps,
+        at stage ends, and on every skipped step) interleaved with event
+        rows (``{"event": ...}``: grad-sync downgrades, data retries,
+        checkpoint saves/recoveries, resume). ``resume=True`` restores the
+        newest *valid* checkpoint from ``checkpoint_dir`` and fast-forwards
+        the plan to the exact mid-stage step.
+        """
+        history: list[dict] = []
+
+        def event(kind: str, **kw):
+            rec = {"event": kind, **kw}
+            history.append(rec)
+            log(f"[{kind}] " + " ".join(f"{k}={v}" for k, v in kw.items()))
+
+        # -- graceful grad-sync degradation (docs/robustness.md) ----------
+        grid = select_grid(self.dp_axes)
+        down = tuple(getattr(self.fault_plan, "down_axes", ()) or ())
+        sync_cfg, sync_events = grad_sync_lib.resolve_sync_config(
+            self.cfg.grad_sync, grid, self.mesh, self.dp_axes,
+            down_axes=down)
+        for ev in sync_events:
+            ev = dict(ev)
+            event(ev.pop("event"), **ev)
+        cfg = dataclasses.replace(self.cfg, grad_sync=sync_cfg)
+
+        # ONE step fn for every stage: jit re-specializes per batch shape.
+        # (A per-global-batch cache here would store identical fns -- the
+        # builder never sees the batch size -- while hiding the per-stage
+        # recompile behind a dict hit.)
+        fn = make_train_step(self.loss_fn, self.mesh, self.dp_axes, cfg,
+                             grid=grid)
+
+        start_step = 0
+        if resume and self.checkpoint_dir:
+            path = checkpoint.latest_valid(
+                self.checkpoint_dir, like=state,
+                on_skip=lambda p, reason: event(
+                    "checkpoint_rejected", path=os.path.basename(p),
+                    reason=reason))
+            if path is not None:
+                state = checkpoint.restore(path, state)
+                start_step = int(state.step)
+                event("resume", path=os.path.basename(path),
+                      step=start_step)
+
+        data_fn = (self.fault_plan.wrap_data_fn(self.data_fn)
+                   if self.fault_plan is not None else self.data_fn)
+
         for stage in self.plan.stages:
             gb = stage.global_batch
-            if gb not in step_fns:
-                step_fns[gb] = make_train_step(
-                    self.loss_fn, self.mesh, self.dp_axes, self.cfg)
-            fn = step_fns[gb]
+            if start_step >= stage.first_step + stage.num_steps:
+                continue       # fast-forward: stage fully covered by ckpt
             for i in range(stage.num_steps):
-                if max_steps is not None and total >= max_steps:
+                gstep = stage.first_step + i
+                if gstep < start_step:
+                    continue   # fast-forward to the exact mid-stage step
+                if max_steps is not None and gstep >= max_steps:
                     return state, history
                 epoch = epoch_of(self.plan, stage, i)
-                batch = self.data_fn(stage.first_step + i, gb)
+                batch = self._fetch_batch(data_fn, gstep, gb, event)
+                if self.fault_plan is not None:
+                    batch = self.fault_plan.corrupt_batch(gstep, batch)
                 state, metrics = fn(state, batch,
                                     jnp.asarray(epoch, jnp.float32),
                                     jnp.asarray(gb, jnp.float32))
-                total += 1
-                if total % self.cfg.log_every == 0 or i == stage.num_steps - 1:
+                done = gstep + 1
+                # reading the flag forces a host sync; without the guard
+                # there is nothing to read and dispatch stays async
+                skipped = int(metrics["skipped"]) if cfg.guard.enabled else 0
+                if (done % cfg.log_every == 0 or i == stage.num_steps - 1
+                        or skipped):
                     m = {k: float(v) for k, v in metrics.items()}
-                    m.update(step=total, epoch=epoch, global_batch=gb)
+                    m.update(step=done, epoch=epoch, global_batch=gb,
+                             skipped=skipped,
+                             nonfinite_count=int(metrics["nonfinite_count"]))
                     history.append(m)
-                    log(f"step {total:5d} epoch {epoch:6.2f} gb {gb:6d} "
+                    log(f"step {done:5d} epoch {epoch:6.2f} gb {gb:6d} "
                         f"loss {m['loss']:.4f} lr {m['lr']:.3f} "
-                        f"mom {m['momentum']:.3f}")
-            if self.checkpoint_dir:
-                from repro.train import checkpoint
-                checkpoint.save(self.checkpoint_dir, state,
-                                name=f"stage_e{stage.stage.end_epoch:g}")
+                        f"mom {m['momentum']:.3f}"
+                        + (f" SKIPPED (nonfinite={m['nonfinite_count']}, "
+                           f"scale->{m['loss_scale']:g})" if skipped else ""))
+                if (self.checkpoint_dir and cfg.ckpt_every_steps
+                        and done % cfg.ckpt_every_steps == 0):
+                    self._save_checkpoint(state, stage, event)
+            # stage-boundary save, unless the periodic save just covered it
+            if self.checkpoint_dir and not (
+                    cfg.ckpt_every_steps
+                    and int(state.step) % cfg.ckpt_every_steps == 0):
+                self._save_checkpoint(state, stage, event)
         return state, history
+
+    # -- recovery paths ---------------------------------------------------
+
+    def _fetch_batch(self, data_fn, gstep: int, gb: int, event):
+        """Fetch with retry + exponential backoff on transient failures."""
+        delay = self.cfg.retry_backoff_s
+        last: Exception | None = None
+        for attempt in range(self.cfg.data_retries + 1):
+            try:
+                return data_fn(gstep, gb)
+            except RETRYABLE as e:
+                last = e
+                event("data_retry", step=gstep, attempt=attempt,
+                      error=f"{type(e).__name__}: {e}")
+                if attempt < self.cfg.data_retries:
+                    time.sleep(delay)
+                    delay *= 2
+        raise RuntimeError(
+            f"data_fn failed at step {gstep} after "
+            f"{self.cfg.data_retries + 1} attempts") from last
+
+    def _save_checkpoint(self, state: TrainState, stage, event) -> None:
+        """Crash-consistent save; a checkpoint failure is an event, not a
+        training abort (the run continues from the previous checkpoint)."""
+        hook = (self.fault_plan.checkpoint_io_hook
+                if self.fault_plan is not None else None)
+        meta = {"stage_end_epoch": stage.stage.end_epoch,
+                "global_batch": stage.global_batch}
+        try:
+            path = checkpoint.save(
+                self.checkpoint_dir, state,
+                retries=self.cfg.ckpt_retries,
+                backoff_s=self.cfg.retry_backoff_s,
+                keep_last=self.cfg.ckpt_keep_last,
+                meta=meta, io_hook=hook,
+                on_retry=lambda attempt, e: event(
+                    "checkpoint_retry", step=int(state.step),
+                    attempt=attempt, error=str(e)))
+            event("checkpoint", step=int(state.step),
+                  path=os.path.basename(path))
+        except checkpoint.CheckpointError as e:
+            event("checkpoint_failed", step=int(state.step), error=str(e))

@@ -30,7 +30,6 @@ def make_mesh(shape, axes):
 
 def run_allreduce(mesh, grid, strategy, lowering, per_rank):
     """per_rank: (world, chunk...) array; rank i contributes per_rank[i]."""
-    world = int(np.prod([mesh.shape[a] for a in grid.axes]))
     spec = P(grid.axes)
 
     @functools.partial(

@@ -62,6 +62,15 @@ def make_tree(rng):
     }
 
 
+def assert_replicated_close(out, want, rtol=1e-5, atol=1e-5):
+    """Every rank of `out` holds the reduced value `want` (broadcast check)."""
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.broadcast_to(b, np.asarray(a).shape),
+            rtol=rtol, atol=atol),
+        out, want)
+
+
 @pytest.mark.parametrize("strategy", ["psum", "ring", "hierarchical", "torus2d"])
 @pytest.mark.parametrize("fuse", [True, False])
 def test_sync_matches_mean_oracle(strategy, fuse):
@@ -69,10 +78,7 @@ def test_sync_matches_mean_oracle(strategy, fuse):
     tree = make_tree(rng)
     cfg = GradSyncConfig(strategy=strategy, fuse=fuse, comm_dtype=jnp.float32)
     out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
-    want = oracle(tree)
-    jax.tree.map(
-        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.broadcast_to(b, np.asarray(a).shape), rtol=1e-5, atol=1e-5),
-        out, want)
+    assert_replicated_close(out, oracle(tree))
 
 
 @pytest.mark.parametrize("lowering", ["xla", "ring"])
@@ -82,9 +88,7 @@ def test_sync_ring_lowering(lowering):
     cfg = GradSyncConfig(strategy="torus2d", lowering=lowering, fuse=True,
                          comm_dtype=jnp.float32)
     out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
-    jax.tree.map(
-        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.broadcast_to(b, np.asarray(a).shape), rtol=1e-5, atol=1e-5),
-        out, oracle(tree))
+    assert_replicated_close(out, oracle(tree))
 
 
 def test_bf16_comm_close_to_fp32_oracle():
@@ -94,10 +98,9 @@ def test_bf16_comm_close_to_fp32_oracle():
     out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
     want = oracle(tree)
     # bn/bias/scale go through the fp32 group -> exact; dense kernel is bf16
-    np.testing.assert_allclose(np.asarray(out["bn"]["scale"]),
-                               np.broadcast_to(want["bn"]["scale"], (WORLD, *want["bn"]["scale"].shape)), rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(out["dense"]["kernel"]),
-                               np.broadcast_to(want["dense"]["kernel"], (WORLD, *want["dense"]["kernel"].shape)), rtol=5e-2, atol=5e-2)
+    assert_replicated_close(out["bn"]["scale"], want["bn"]["scale"])
+    assert_replicated_close(out["dense"]["kernel"], want["dense"]["kernel"],
+                            rtol=5e-2, atol=5e-2)
 
 
 @settings(max_examples=20, deadline=None)
@@ -116,9 +119,7 @@ def test_property_arbitrary_pytrees(shapes, strategy, fuse, seed):
             for i, s in enumerate(shapes)}
     cfg = GradSyncConfig(strategy=strategy, fuse=fuse, comm_dtype=jnp.float32)
     out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
-    jax.tree.map(
-        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.broadcast_to(b, np.asarray(a).shape), rtol=1e-4, atol=1e-5),
-        out, oracle(tree))
+    assert_replicated_close(out, oracle(tree), rtol=1e-4)
 
 
 def test_sum_mode():
@@ -126,5 +127,4 @@ def test_sum_mode():
     tree = {"w": rng.randn(WORLD, 16).astype(np.float32)}
     cfg = GradSyncConfig(strategy="torus2d", mean=False, comm_dtype=jnp.float32)
     out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
-    np.testing.assert_allclose(np.asarray(out["w"]), np.broadcast_to(tree["w"].sum(0), tree["w"].shape),
-                               rtol=1e-5, atol=1e-5)
+    assert_replicated_close(out["w"], tree["w"].sum(0))

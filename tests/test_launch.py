@@ -8,7 +8,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.shapes import SHAPES, long_context_variant
 from repro.launch import hlo_stats
-from repro.launch.mesh import cache_pspecs, dp_axes_of, param_pspecs
+from repro.launch.mesh import cache_pspecs, param_pspecs
 
 
 class FakeMesh:

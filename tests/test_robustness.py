@@ -1,0 +1,409 @@
+"""Fault-tolerance layer (docs/robustness.md): chaos-driven training runs,
+non-finite-gradient guards + dynamic loss scale, crash-consistent
+checkpointing, resume, and graceful grad-sync degradation."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core.grad_sync import (GradSyncConfig, fallback_chain,
+                                  resolve_sync_config)
+from repro.core.schedules import BatchSchedule, BatchStage
+from repro.core.batch_control import build_plan
+from repro.core.topology import select_grid
+from repro.data.synthetic import SyntheticImageNet
+from repro.models import resnet
+from repro.testing.chaos import FaultPlan, TransientDataError
+from repro.train import checkpoint
+from repro.train.state import TrainState
+from repro.train.trainer import (GuardConfig, Trainer, TrainerConfig,
+                                 make_train_step)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((2, 4), ("dy", "dx"))
+
+
+CFG = resnet.ResNetConfig.tiny(num_classes=4)
+DATA = SyntheticImageNet(num_classes=4, image_size=32, noise=0.3)
+
+
+def resnet_loss(params, batch, dp_axes):
+    images, labels = batch
+    logits = resnet.apply(params, images, CFG, dp_axes=dp_axes)
+    return losses.label_smoothing_xent(
+        logits, labels, 0.1), jnp.zeros((), jnp.float32)
+
+
+def make_trainer(mesh, *, max_steps, ckpt_dir=None, fault_plan=None,
+                 strategy="torus2d", ckpt_every=0, guard=GuardConfig()):
+    sched = BatchSchedule((BatchStage(0, 1.0, 2),))
+    plan = build_plan(sched, dataset_size=256, n_workers=8,
+                      max_steps=max_steps)
+    tcfg = TrainerConfig(
+        grad_sync=GradSyncConfig(strategy=strategy), guard=guard,
+        log_every=1000, ckpt_every_steps=ckpt_every,
+        retry_backoff_s=1e-4)
+    return Trainer(mesh=mesh, dp_axes=("dy", "dx"), loss_fn=resnet_loss,
+                   cfg=tcfg, plan=plan,
+                   data_fn=lambda i, gb: DATA.batch(i, gb),
+                   checkpoint_dir=ckpt_dir, fault_plan=fault_plan)
+
+
+def fresh_state(loss_scale=1.0):
+    return TrainState.create(resnet.init(jax.random.key(0), CFG),
+                             loss_scale=loss_scale)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: chaos run across >= 3 fault classes, bit-identical
+# to a fault-free run (skipped steps excluded)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_chaos_run_bit_identical_to_fault_free(mesh, tmp_path):
+    """Four injected fault classes -- transient data_fn failures, a
+    checkpoint write crashed mid-file, a down torus axis, and non-finite
+    gradients -- and the run must still produce params bit-identical to a
+    fault-free run of the same seed.
+
+    The non-finite steps are the tail of the plan so "skipped steps
+    excluded" is exact: a skipped step must be a true no-op on params and
+    momentum, so the 10-step faulted run (last 2 skipped) matches the
+    8-step clean run bit for bit. The down axis degrades torus2d -> ring,
+    so the clean reference uses ring explicitly to share the schedule.
+    """
+    faults = FaultPlan(
+        nan_grad_steps=(8,), inf_grad_steps=(9,),
+        data_fail_steps=(2, 5), ckpt_crash_writes=(0,),
+        down_axes=("dy",))
+    trainer = make_trainer(mesh, max_steps=10, ckpt_dir=str(tmp_path),
+                           fault_plan=faults, strategy="torus2d",
+                           ckpt_every=4)
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert int(state.step) == 10
+
+    ref = make_trainer(mesh, max_steps=8, strategy="ring")
+    ref_state, _ = ref.run(fresh_state(), max_steps=8, log=lambda *a: None)
+
+    assert_trees_equal(state.params, ref_state.params)
+    assert_trees_equal(state.opt_state, ref_state.opt_state)
+
+    # every recovery is visible in history
+    events = [h["event"] for h in history if "event" in h]
+    assert "grad_sync_downgrade" in events
+    assert "data_retry" in events
+    assert "checkpoint_retry" in events
+    assert "checkpoint" in events
+    downgrade = next(h for h in history
+                     if h.get("event") == "grad_sync_downgrade")
+    assert (downgrade["from"], downgrade["to"]) == ("torus2d", "ring")
+    skipped = [h for h in history if h.get("skipped")]
+    assert [h["step"] for h in skipped] == [9, 10]
+    assert all(h["nonfinite_count"] > 0 for h in skipped)
+
+    # the crashed+retried checkpoints on disk are all valid and restorable
+    best = checkpoint.latest_valid(str(tmp_path), like=state)
+    assert best is not None
+    assert_trees_equal(checkpoint.restore(best, state).params, state.params)
+
+
+@pytest.mark.multidevice
+def test_nonfinite_guard_skips_update_and_rescales(mesh):
+    """Unit-level guard semantics: skip is a param/momentum no-op, the loss
+    scale halves per skip and regrows after growth_interval clean steps."""
+    tcfg = TrainerConfig(
+        grad_sync=GradSyncConfig(strategy="psum"),
+        guard=GuardConfig(init_scale=4.0, growth_interval=2,
+                          growth_factor=2.0, backoff_factor=0.5,
+                          max_scale=8.0))
+    step = make_train_step(resnet_loss, mesh, ("dy", "dx"), tcfg,
+                           donate=False)
+    state = fresh_state(loss_scale=4.0)
+    good = DATA.batch(0, 16)
+    bad = FaultPlan(nan_grad_steps=(0,)).corrupt_batch(0, good)
+    ep, gb = jnp.asarray(0.0), jnp.asarray(16.0)
+
+    s1, m1 = step(state, bad, ep, gb)
+    assert int(m1["skipped"]) == 1 and int(m1["nonfinite_count"]) > 0
+    assert_trees_equal(s1.params, state.params)        # true no-op
+    assert_trees_equal(s1.opt_state, state.opt_state)
+    assert float(s1.loss_scale) == 2.0                 # backed off
+    assert int(s1.step) == 1                           # step still counts
+
+    s2, m2 = step(s1, good, ep, gb)
+    assert int(m2["skipped"]) == 0
+    assert float(s2.loss_scale) == 2.0                 # 1 clean step: hold
+    s3, _ = step(s2, good, ep, gb)
+    assert float(s3.loss_scale) == 4.0                 # 2 clean: regrow
+    assert int(s3.good_steps) == 0                     # counter reset
+
+
+@pytest.mark.multidevice
+def test_guarded_step_is_bit_identical_when_clean(mesh):
+    """GuardConfig(init_scale=1.0) must not perturb clean-step numerics."""
+    batch = DATA.batch(0, 16)
+    ep, gb = jnp.asarray(0.5), jnp.asarray(16.0)
+    outs = {}
+    for enabled in (True, False):
+        tcfg = TrainerConfig(grad_sync=GradSyncConfig(strategy="torus2d"),
+                             guard=GuardConfig(enabled=enabled))
+        step = make_train_step(resnet_loss, mesh, ("dy", "dx"), tcfg,
+                               donate=False)
+        outs[enabled], _ = step(fresh_state(), batch, ep, gb)
+    assert_trees_equal(outs[True].params, outs[False].params)
+    assert_trees_equal(outs[True].opt_state, outs[False].opt_state)
+
+
+# ---------------------------------------------------------------------------
+# Graceful grad-sync degradation
+# ---------------------------------------------------------------------------
+
+def test_fallback_chains_end_in_psum():
+    for strategy in ("torus2d", "hierarchical", "ring", "psum"):
+        chain = fallback_chain(strategy)
+        assert chain[0] == strategy and chain[-1] == "psum"
+    assert fallback_chain("unknown") == ("unknown", "psum")
+
+
+@pytest.mark.multidevice
+def test_resolve_keeps_viable_strategy(mesh):
+    grid = select_grid(("dy", "dx"))
+    cfg, events = resolve_sync_config(GradSyncConfig(strategy="torus2d"),
+                                      grid, mesh, ("dy", "dx"))
+    assert cfg.strategy == "torus2d" and events == []
+
+
+@pytest.mark.multidevice
+def test_resolve_degrades_on_down_axis(mesh):
+    grid = select_grid(("dy", "dx"))
+    cfg, events = resolve_sync_config(GradSyncConfig(strategy="torus2d"),
+                                      grid, mesh, ("dy", "dx"),
+                                      down_axes=("dy",))
+    assert cfg.strategy == "ring"
+    rejected = [e["strategy"] for e in events
+                if e["event"] == "grad_sync_strategy_rejected"]
+    assert rejected == ["torus2d", "hierarchical"]
+    assert events[-1] == {"event": "grad_sync_downgrade",
+                          "from": "torus2d", "to": "ring"}
+    # explicit ppermute ring pins dead neighbor links -> psum
+    cfg2, _ = resolve_sync_config(
+        GradSyncConfig(strategy="torus2d", lowering="ring"), grid, mesh,
+        ("dy", "dx"), down_axes=("dy",))
+    assert cfg2.strategy == "psum"
+
+
+# ---------------------------------------------------------------------------
+# Step-fn build: one builder call for a multi-stage plan (regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_single_step_fn_across_stages(mesh, monkeypatch):
+    """The old per-global-batch cache stored identical fns (the builder
+    never saw the batch size); now the step fn is built exactly once and
+    jit specializes per stage shape."""
+    import repro.train.trainer as trainer_mod
+    calls = []
+    real = trainer_mod.make_train_step
+
+    def counting(*a, **kw):
+        calls.append(a)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(trainer_mod, "make_train_step", counting)
+    sched = BatchSchedule((BatchStage(0, 0.125, 2), BatchStage(0.125, 0.25, 4)))
+    plan = build_plan(sched, dataset_size=256, n_workers=8, max_steps=4)
+    trainer = Trainer(mesh=mesh, dp_axes=("dy", "dx"), loss_fn=resnet_loss,
+                      cfg=TrainerConfig(log_every=1000), plan=plan,
+                      data_fn=lambda i, gb: DATA.batch(i, gb))
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert len(calls) == 1
+    assert {h["global_batch"] for h in history if "global_batch" in h} \
+        == {16, 32}
+
+
+# ---------------------------------------------------------------------------
+# Crash-consistent checkpointing
+# ---------------------------------------------------------------------------
+
+def two_states():
+    s5 = fresh_state()
+    s5 = TrainState(s5.params, s5.opt_state, jnp.asarray(5, jnp.int32),
+                    s5.loss_scale, s5.good_steps)
+    s10 = TrainState(jax.tree.map(lambda x: x + 1, s5.params), s5.opt_state,
+                     jnp.asarray(10, jnp.int32), s5.loss_scale, s5.good_steps)
+    return s5, s10
+
+
+def test_latest_orders_by_step_not_mtime(tmp_path):
+    """Regression: mtime ordering picks the wrong file for copied/restored
+    checkpoints; `latest` must order by manifest step."""
+    s5, s10 = two_states()
+    p10 = checkpoint.save(str(tmp_path), s10)
+    p5 = checkpoint.save(str(tmp_path), s5)      # later mtime, older step
+    os.utime(p10, (1, 1))                        # make step-10 look ancient
+    assert checkpoint.latest(str(tmp_path)) == p10
+    # an old checkpoint copied back in (fresh mtime, step 5 in its
+    # manifest) never shadows the true newest
+    for src in (p5, checkpoint.manifest_path(p5)):
+        shutil.copy(src, str(tmp_path) + "/" +
+                    os.path.basename(src).replace("step_", "restored_"))
+    assert checkpoint.latest(str(tmp_path)) == p10
+
+
+def test_checkpoint_roundtrip_preserves_guard_state(tmp_path):
+    state = fresh_state(loss_scale=8.0)
+    path = checkpoint.save(str(tmp_path), state)
+    restored = checkpoint.restore(path, state)
+    assert_trees_equal(restored.params, state.params)
+    assert float(restored.loss_scale) == 8.0
+    manifest = checkpoint.validate(path, like=state)
+    assert manifest["step"] == 0 and manifest["format_version"] == 1
+
+
+def test_truncated_checkpoint_rejected_with_fallback(tmp_path):
+    """A truncated npz is rejected with a clear error and latest_valid
+    falls back to the previous valid checkpoint."""
+    s5, s10 = two_states()
+    p5 = checkpoint.save(str(tmp_path), s5)
+    p10 = checkpoint.save(str(tmp_path), s10)
+    with open(p10, "r+b") as f:                  # truncate mid-payload
+        f.truncate(os.path.getsize(p10) // 2)
+    with pytest.raises(checkpoint.CheckpointCorruptError,
+                       match="unreadable payload|CRC"):
+        checkpoint.restore(p10, s10)
+    skipped = []
+    best = checkpoint.latest_valid(str(tmp_path), like=s5,
+                                   on_skip=lambda p, r: skipped.append(p))
+    assert best == p5 and skipped == [p10]
+    restored = checkpoint.restore(best, s5)
+    assert int(restored.step) == 5
+    assert_trees_equal(restored.params, s5.params)
+
+
+def test_bitflip_detected_by_crc(tmp_path):
+    state = fresh_state()
+    path = checkpoint.save(str(tmp_path), state)
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF                 # flip a payload bit
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(checkpoint.CheckpointCorruptError):
+        checkpoint.validate(path)
+
+
+def test_crashed_write_leaves_no_torso(tmp_path):
+    """A crash mid-write (injected OSError before rename, retries
+    exhausted) must leave the directory exactly as it was: the previous
+    checkpoint intact, no tmp files, no uncommitted npz."""
+    s5, s10 = two_states()
+    p5 = checkpoint.save(str(tmp_path), s5)
+    plan = FaultPlan(ckpt_crash_writes=(0,), ckpt_crashes_per_write=99)
+    with pytest.raises(checkpoint.CheckpointError):
+        checkpoint.save(str(tmp_path), s10, retries=2, backoff_s=1e-4,
+                        io_hook=plan.checkpoint_io_hook)
+    names = sorted(os.listdir(str(tmp_path)))
+    assert names == sorted([os.path.basename(p5),
+                            os.path.basename(checkpoint.manifest_path(p5))])
+    checkpoint.validate(p5, like=s5)             # survivor still valid
+
+
+def test_retention_prunes_oldest(tmp_path):
+    states = []
+    base = fresh_state()
+    for step in (1, 2, 3, 4):
+        st = TrainState(base.params, base.opt_state,
+                        jnp.asarray(step, jnp.int32), base.loss_scale,
+                        base.good_steps)
+        states.append(checkpoint.save(str(tmp_path), st, keep_last=2))
+    left = sorted(f for f in os.listdir(str(tmp_path)) if f.endswith(".npz"))
+    assert left == ["step_00000003.npz", "step_00000004.npz"]
+    assert checkpoint.latest(str(tmp_path)).endswith("step_00000004.npz")
+
+
+def test_save_retries_transient_io_errors(tmp_path):
+    state = fresh_state()
+    plan = FaultPlan(ckpt_crash_writes=(0,), ckpt_crashes_per_write=2)
+    attempts = []
+    path = checkpoint.save(str(tmp_path), state, retries=3, backoff_s=1e-4,
+                           io_hook=plan.checkpoint_io_hook,
+                           on_retry=lambda a, e: attempts.append(a))
+    assert attempts == [0, 1]                    # two crashes, then success
+    checkpoint.validate(path, like=state)
+
+
+# ---------------------------------------------------------------------------
+# Resume: bit-exact params after interrupt + resume vs uninterrupted run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_resume_midstage_bit_exact(mesh, tmp_path):
+    straight = make_trainer(mesh, max_steps=10)
+    ref, _ = straight.run(fresh_state(), log=lambda *a: None)
+
+    part = make_trainer(mesh, max_steps=10, ckpt_dir=str(tmp_path),
+                        ckpt_every=4)
+    part.run(fresh_state(), max_steps=7, log=lambda *a: None)   # "crash" at 7
+
+    resumed_tr = make_trainer(mesh, max_steps=10, ckpt_dir=str(tmp_path),
+                              ckpt_every=4)
+    resumed, history = resumed_tr.run(fresh_state(), resume=True,
+                                      log=lambda *a: None)
+    ev = next(h for h in history if h.get("event") == "resume")
+    assert ev["step"] == 4          # newest valid ckpt was step 4 (not 7)
+    assert int(resumed.step) == 10
+    assert_trees_equal(resumed.params, ref.params)
+    assert_trees_equal(resumed.opt_state, ref.opt_state)
+
+
+@pytest.mark.multidevice
+def test_resume_skips_corrupt_newest(mesh, tmp_path):
+    part = make_trainer(mesh, max_steps=6, ckpt_dir=str(tmp_path),
+                        ckpt_every=2)
+    part.run(fresh_state(), log=lambda *a: None)
+    newest = checkpoint.latest(str(tmp_path))
+    with open(newest, "r+b") as f:
+        f.truncate(100)
+    resumed_tr = make_trainer(mesh, max_steps=6, ckpt_dir=str(tmp_path))
+    _, history = resumed_tr.run(fresh_state(), resume=True,
+                                log=lambda *a: None)
+    kinds = [h.get("event") for h in history if "event" in h]
+    assert "checkpoint_rejected" in kinds
+    ev = next(h for h in history if h.get("event") == "resume")
+    assert ev["step"] == 4          # fell back past the corrupt step-6 file
+
+
+# ---------------------------------------------------------------------------
+# Data-pipeline transient failures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_data_failures_exhaust_retries(mesh):
+    faults = FaultPlan(data_fail_steps=(1,), data_failures_per_step=99)
+    trainer = make_trainer(mesh, max_steps=3, fault_plan=faults)
+    with pytest.raises(RuntimeError, match="data_fn failed at step 1"):
+        trainer.run(fresh_state(), log=lambda *a: None)
+
+
+def test_fault_plan_determinism():
+    plan_a = FaultPlan.random(7, 100)
+    plan_b = FaultPlan.random(7, 100)
+    assert plan_a.nan_grad_steps == plan_b.nan_grad_steps
+    assert plan_a.data_fail_steps == plan_b.data_fail_steps
+    wrapped = plan_a.wrap_data_fn(lambda i, gb: "ok")
+    step = plan_a.data_fail_steps[0]
+    with pytest.raises(TransientDataError):
+        wrapped(step, 16)
+    assert wrapped(step, 16) == "ok"             # transient: retry succeeds

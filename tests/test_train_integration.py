@@ -2,7 +2,6 @@
 batch-size control + 2D-torus grad sync + SyncBN + mixed precision) training
 a tiny ResNet on synthetic data across an 8-device mesh."""
 
-import functools
 
 import jax
 import jax.numpy as jnp
