@@ -269,14 +269,17 @@ def _strategy_viable(strategy: str, lowering: str, grid: TorusGrid, mesh,
 
 
 def resolve_sync_config(cfg: GradSyncConfig, grid: TorusGrid, mesh,
-                        manual_axes, down_axes=(), probe: bool = True
+                        manual_axes, down_axes=(), probe: bool = True,
+                        context: str = "startup"
                         ) -> tuple[GradSyncConfig, list[dict]]:
     """Walk ``cfg.strategy``'s fallback chain; return the first viable
     config plus the rejection/downgrade events (for history/logging).
 
     Never raises: psum terminates every chain and always lowers. A
     downgrade is an event, not an error -- the job keeps training
-    (docs/robustness.md).
+    (docs/robustness.md). ``context`` tags the events with *when* the
+    resolution ran: ``"startup"`` (job launch) or ``"elastic"`` (mid-run
+    re-resolution after a permanent failure, ``repro.train.elastic``).
     """
     events: list[dict] = []
     chain = fallback_chain(cfg.strategy)
@@ -288,13 +291,15 @@ def resolve_sync_config(cfg: GradSyncConfig, grid: TorusGrid, mesh,
                 events.append({
                     "event": "grad_sync_downgrade",
                     "from": cfg.strategy, "to": strategy,
+                    "context": context,
                 })
             return dataclasses.replace(cfg, strategy=strategy), events
         events.append({"event": "grad_sync_strategy_rejected",
-                       "strategy": strategy, "reason": reason})
+                       "strategy": strategy, "reason": reason,
+                       "context": context})
     # unreachable in practice (psum has no rejection path), but never abort
     events.append({"event": "grad_sync_downgrade",
-                   "from": cfg.strategy, "to": "psum"})
+                   "from": cfg.strategy, "to": "psum", "context": context})
     return dataclasses.replace(cfg, strategy="psum"), events
 
 

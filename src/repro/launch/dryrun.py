@@ -11,10 +11,16 @@ Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 
 # The production mesh needs 512 placeholder devices; jax locks the device
-# count at first init, so this MUST precede every other import.
+# count at first init, so this MUST precede every other import. The chaos
+# *training* smoke (--chaos-train) actually executes steps, so it uses the
+# 8-device test mesh instead -- 512 simulated devices would make every
+# step interminable.
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+import sys
+_N_DEVICES = 8 if "--chaos-train" in sys.argv else 512
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_N_DEVICES} "
+    + os.environ.get("XLA_FLAGS", ""))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
@@ -292,6 +298,100 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     return result
 
 
+def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
+                max_steps: int = 8) -> dict:
+    """Elastic-recovery smoke: run a real (tiny) training loop on the
+    8-device mesh, kill torus axis "dy" permanently at ``fault_step``, and
+    require the run to finish every planned step via a mid-run
+    torus2d->ring downgrade + checkpoint rollback (docs/robustness.md,
+    "Elastic recovery"). Writes ``<out_dir>/chaos_train.json``; raises
+    ``SystemExit`` if the run aborts or the recovery is not visible in the
+    event stream -- the CI chaos-smoke job gates on exactly this.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.schedules import BatchSchedule, BatchStage
+    from repro.core.batch_control import build_plan
+    from repro.data.synthetic import SyntheticImageNet
+    from repro.models import resnet
+    from repro.train.state import TrainState
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    mesh = jax.make_mesh((2, 4), ("dy", "dx"))
+    cfg = resnet.ResNetConfig.tiny(num_classes=4)
+    data = SyntheticImageNet(num_classes=4, image_size=32, noise=0.3)
+
+    def loss_fn(params, batch, dp_axes):
+        images, labels = batch
+        logits = resnet.apply(params, images, cfg, dp_axes=dp_axes)
+        return (losses.label_smoothing_xent(logits, labels, 0.1),
+                jnp.zeros((), jnp.float32))
+
+    plan = build_plan(BatchSchedule((BatchStage(0, 1.0, 2),)),
+                      dataset_size=256, n_workers=8, max_steps=max_steps)
+    tcfg = TrainerConfig(grad_sync=GradSyncConfig(strategy="torus2d"),
+                         log_every=1, ckpt_every_steps=2, ckpt_keep_last=10,
+                         retry_backoff_s=1e-4)
+    fault_plan = FaultPlan(axis_down_events=(("dy", fault_step),))
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_train_ckpt_")
+    completed, error = False, None
+    state = TrainState.create(resnet.init(jax.random.key(0), cfg))
+    trainer = Trainer(mesh=mesh, dp_axes=("dy", "dx"), loss_fn=loss_fn,
+                      cfg=tcfg, plan=plan,
+                      data_fn=lambda i, gb: data.batch(i, gb),
+                      checkpoint_dir=ckpt_dir, fault_plan=fault_plan)
+    t0 = time.time()
+    try:
+        state, history = trainer.run(state)
+        completed = True
+    except Exception as e:  # noqa: BLE001 -- the abort IS the test failure
+        error = repr(e)
+        history = []
+        traceback.print_exc()
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    events = [h for h in history if "event" in h]
+    downgrades = [e for e in events if e["event"] == "grad_sync_downgrade"]
+    recoveries = [e for e in events if e["event"] == "elastic_recovery"]
+    steps_done = int(state.step) if completed else 0
+    losses_seen = [h["loss"] for h in history if "loss" in h]
+    result = {
+        "mode": "chaos_train", "mesh": "2x4", "chips": 8,
+        "fault": {"axis": "dy", "down_from_step": fault_step},
+        "planned_steps": max_steps, "steps": steps_done,
+        "completed": completed, "error": error,
+        "wall_s": round(time.time() - t0, 1),
+        "loss_finite": bool(np.all(np.isfinite(losses_seen))),
+        "events": events,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "chaos_train.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[chaos-train] wrote {path}")
+
+    problems = []
+    if not completed:
+        problems.append(f"run aborted: {error}")
+    elif steps_done != max_steps:
+        problems.append(f"finished {steps_done}/{max_steps} steps")
+    if not any(d.get("context") == "elastic" for d in downgrades):
+        problems.append("no mid-run grad_sync_downgrade event")
+    if not recoveries:
+        problems.append("no elastic_recovery event")
+    if problems:
+        raise SystemExit("[chaos-train] FAILED: " + "; ".join(problems))
+    print(f"[chaos-train] OK: axis dy died at step {fault_step}, run "
+          f"finished {steps_done}/{max_steps} steps "
+          f"(downgrade {downgrades[0]['from']}->{downgrades[0]['to']}, "
+          f"rollback to step {recoveries[0]['step']})")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -310,9 +410,20 @@ def main():
                          "must degrade along the fallback chain instead of "
                          "aborting; events land in the JSON "
                          "(docs/robustness.md)")
+    ap.add_argument("--chaos-train", action="store_true",
+                    help="elastic-recovery smoke: run a real tiny training "
+                         "loop (8-device mesh), kill a torus axis "
+                         "permanently mid-run, and require completion via "
+                         "mid-run downgrade + checkpoint rollback")
+    ap.add_argument("--fault-step", type=int, default=3,
+                    help="step at which --chaos-train kills the axis")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+
+    if args.chaos_train:
+        chaos_train(args.fault_step, args.out)
+        return
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     archs = registry.ARCH_IDS if (args.all or not args.arch) else [args.arch]

@@ -27,6 +27,24 @@ points:
 strategy-fallback chain in ``grad_sync.resolve_sync_config`` then refuses
 strategies whose phase decomposition depends on those axes and degrades
 (torus2d -> ring -> psum) instead of aborting.
+
+Beyond the transient classes above, a plan can schedule **permanent**
+failures for the elastic recovery layer (``repro.train.elastic``,
+docs/robustness.md "Elastic recovery"):
+
+* ``axis_down_events``       -- (axis, step) pairs: the axis is healthy
+  until ``step`` and dead from then on. ``down_axes_at(step)`` is the
+  health probe the trainer's supervisor polls each step; detection must
+  trigger a mid-run strategy re-resolution + checkpoint rollback.
+* ``timeout_steps``          -- steps reported as timed out (a straggler);
+  consumed per *invocation* so a rolled-back replay of the same step is
+  clean, mirroring "the dead worker got replaced".
+* ``grad_fault_once=True``   -- NaN/Inf poisoning fires only on the first
+  visit to each step, so a rollback past a poisoned streak replays clean.
+* ``ckpt_dir_fail_from``     -- every checkpoint write from that save
+  index onward fails *persistently* (dead filesystem, not a blip): the
+  run must keep training and ``latest_valid`` must keep resolving to the
+  last pre-failure checkpoint.
 """
 
 from __future__ import annotations
@@ -58,14 +76,21 @@ class FaultPlan:
     seed: int = 0
     nan_grad_steps: tuple[int, ...] = ()     # batch poisoned with NaN
     inf_grad_steps: tuple[int, ...] = ()     # batch poisoned with +Inf
+    grad_fault_once: bool = False            # poison each step only once
     data_fail_steps: tuple[int, ...] = ()    # data_fn raises (transient)
     data_failures_per_step: int = 1          # consecutive failures per step
     ckpt_crash_writes: tuple[int, ...] = ()  # save indices crashed mid-file
     ckpt_crashes_per_write: int = 1          # consecutive crashes per save
-    down_axes: tuple[str, ...] = ()          # torus mesh axes marked down
+    ckpt_dir_fail_from: int = -1             # all saves >= idx fail (perm.)
+    down_axes: tuple[str, ...] = ()          # torus axes down from step 0
+    axis_down_events: tuple[tuple[str, int], ...] = ()  # (axis, down_step)
+    timeout_steps: tuple[int, ...] = ()      # steps reported timed out
+    timeouts_per_step: int = 1               # consecutive timeouts per step
 
     def __post_init__(self):
         self._data_attempts: dict[int, int] = {}
+        self._timeout_attempts: dict[int, int] = {}
+        self._poisoned: set[int] = set()
         self._ckpt_save_idx = -1
 
     # -- gradient corruption ------------------------------------------------
@@ -84,6 +109,12 @@ class FaultPlan:
             val = float("inf")
         else:
             return batch
+        if self.grad_fault_once:
+            # once-per-step semantics: a rollback past a poisoned streak
+            # replays clean (the faulty node was replaced)
+            if step in self._poisoned:
+                return batch
+            self._poisoned.add(step)
 
         def poison(leaf):
             leaf = jnp.asarray(leaf)
@@ -113,6 +144,32 @@ class FaultPlan:
 
         return wrapped
 
+    # -- permanent failures (elastic recovery layer) ------------------------
+
+    def down_axes_at(self, step: int) -> tuple[str, ...]:
+        """Health probe: every torus axis dead at global ``step``.
+
+        ``down_axes`` are dead from launch; ``axis_down_events`` axes die
+        permanently at their scheduled step. The trainer's elastic
+        supervisor polls this before each step and treats any *new* axis as
+        a permanent failure (docs/robustness.md).
+        """
+        dead = set(self.down_axes)
+        dead.update(a for a, s in self.axis_down_events if step >= s)
+        return tuple(sorted(dead))
+
+    def step_timed_out(self, step: int) -> bool:
+        """Straggler signal: True for the first ``timeouts_per_step``
+        invocations at each step in ``timeout_steps`` (invocation-counted,
+        like data failures, so a rolled-back replay runs clean)."""
+        if step not in self.timeout_steps:
+            return False
+        n = self._timeout_attempts.get(step, 0)
+        if n >= self.timeouts_per_step:
+            return False
+        self._timeout_attempts[step] = n + 1
+        return True
+
     # -- checkpoint-write crashes -------------------------------------------
 
     def checkpoint_io_hook(self, phase: str, attempt: int) -> None:
@@ -130,6 +187,12 @@ class FaultPlan:
             return
         if phase != "payload":
             return
+        if 0 <= self.ckpt_dir_fail_from <= self._ckpt_save_idx:
+            # persistent: every attempt of every save from here on fails
+            # (dead checkpoint filesystem) -- retries must NOT absorb it
+            raise OSError(
+                f"injected persistent checkpoint-dir failure (save "
+                f"#{self._ckpt_save_idx} >= {self.ckpt_dir_fail_from})")
         if (self._ckpt_save_idx in self.ckpt_crash_writes
                 and attempt < self.ckpt_crashes_per_write):
             raise OSError(

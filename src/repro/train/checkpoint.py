@@ -17,22 +17,35 @@ between the two renames) and is ignored by ``latest``/``latest_valid``.
 A crash at any point leaves either the previous complete checkpoint or a
 new complete one, never a half-written file under a committed name.
 
-``save`` retries transient IO errors with exponential backoff and prunes
-to ``keep_last`` checkpoints (step-ordered). ``latest`` orders by *step*
-parsed from the manifest (filename fallback) -- never by mtime, which lies
-for copied/restored files. ``restore`` verifies CRCs and shapes and raises
+``save`` retries transient IO errors with jittered exponential backoff
+(``repro.utils.retry``) and prunes to ``keep_last`` checkpoints
+(step-ordered). ``latest`` orders by *step* parsed from the manifest
+(filename fallback) -- never by mtime, which lies for copied/restored
+files. ``restore`` verifies CRCs and shapes and raises
 :class:`CheckpointCorruptError` with the offending leaf; ``latest_valid``
 walks candidates newest-first and returns the first that passes
 validation, so a corrupt newest checkpoint falls back to the previous
 valid one instead of killing the job.
+
+:class:`AsyncCheckpointWriter` moves the commit off the training thread:
+``save`` snapshots the state to host numpy buffers (the only part the
+caller pays for) and enqueues the write; a single worker thread runs the
+identical tmp+fsync+rename protocol, so everything above --
+``latest`` / ``latest_valid`` / ``restore`` / crash consistency -- holds
+unchanged for async checkpoints. The queue is bounded (backpressure, not
+unbounded host memory), commits land in enqueue order, failures surface as
+drained events plus ``errors``, and ``flush``/``close`` give the trainer a
+durability barrier (it flushes before any restore decision).
 """
 
 from __future__ import annotations
 
+import collections
 import json
 import os
+import queue as queue_lib
 import re
-import time
+import threading
 import zlib
 from typing import Callable
 
@@ -40,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.train.state import TrainState
+from repro.utils.retry import retry_call
 
 _SEP = "::"
 MANIFEST_SUFFIX = ".manifest.json"
@@ -112,23 +126,9 @@ def _atomic_write(path: str, write_fn: Callable, io_hook=None,
                 pass
 
 
-def save(directory: str, state: TrainState, name: str | None = None, *,
-         retries: int = 3, backoff_s: float = 0.05, keep_last: int = 0,
-         meta: dict | None = None, io_hook=None, on_retry=None) -> str:
-    """Atomically write ``state`` and its manifest; returns the npz path.
-
-    ``io_hook(phase, attempt)`` (phases ``begin``/``payload``/``manifest``)
-    may raise to simulate a crash; OSErrors are retried ``retries`` times
-    with exponential backoff starting at ``backoff_s``, reporting each
-    failed attempt to ``on_retry(attempt, exc)``. ``keep_last > 0`` prunes
-    to the newest K checkpoints by step after a successful write.
-    """
-    os.makedirs(directory, exist_ok=True)
-    step = int(state.step)
-    name = name or f"step_{step:08d}"
-    path = os.path.join(directory, f"{name}.npz")
-    payload = _payload_of(state)
-    manifest = {
+def _manifest_of(payload: dict[str, np.ndarray], step: int, name: str,
+                 meta: dict | None) -> dict:
+    return {
         "format_version": FORMAT_VERSION,
         "step": step,
         "name": name,
@@ -138,29 +138,187 @@ def save(directory: str, state: TrainState, name: str | None = None, *,
                    for k, v in payload.items()},
     }
 
-    delay = backoff_s
-    for attempt in range(retries + 1):
-        try:
-            if io_hook is not None:
-                io_hook("begin", attempt)
-            _atomic_write(path, lambda f: np.savez(f, **payload),
-                          io_hook, "payload", attempt)
-            _atomic_write(manifest_path(path),
-                          lambda f: f.write(json.dumps(manifest).encode()),
-                          io_hook, "manifest", attempt)
-            break
-        except OSError as e:
-            if on_retry is not None:
-                on_retry(attempt, e)
-            if attempt >= retries:
-                raise CheckpointError(
-                    f"checkpoint write failed after {retries + 1} attempts: "
-                    f"{e}") from e
-            time.sleep(delay)
-            delay *= 2
+
+def _commit(directory: str, path: str, payload: dict[str, np.ndarray],
+            manifest: dict, *, retries: int, backoff_s: float,
+            keep_last: int, io_hook, on_retry) -> str:
+    """The durable half of a save: atomic payload + manifest writes under
+    the shared retry helper, then retention pruning. Runs on the caller
+    thread for :func:`save`, on the worker thread for
+    :class:`AsyncCheckpointWriter`."""
+    os.makedirs(directory, exist_ok=True)
+    attempt_box = [0]
+
+    def once():
+        a = attempt_box[0]
+        attempt_box[0] += 1
+        if io_hook is not None:
+            io_hook("begin", a)
+        _atomic_write(path, lambda f: np.savez(f, **payload),
+                      io_hook, "payload", a)
+        _atomic_write(manifest_path(path),
+                      lambda f: f.write(json.dumps(manifest).encode()),
+                      io_hook, "manifest", a)
+
+    try:
+        retry_call(once, retries=retries, backoff_s=backoff_s,
+                   retry_on=(OSError,), on_retry=on_retry,
+                   seed=manifest["step"])
+    except OSError as e:
+        raise CheckpointError(
+            f"checkpoint write failed after {retries + 1} attempts: "
+            f"{e}") from e
     if keep_last > 0:
         _prune(directory, keep_last)
     return path
+
+
+def _prepare(directory: str, state: TrainState, name: str | None,
+             meta: dict | None):
+    """Host snapshot + manifest: the synchronous part of every save."""
+    step = int(state.step)
+    name = name or f"step_{step:08d}"
+    path = os.path.join(directory, f"{name}.npz")
+    payload = _payload_of(state)
+    return path, payload, _manifest_of(payload, step, name, meta)
+
+
+def save(directory: str, state: TrainState, name: str | None = None, *,
+         retries: int = 3, backoff_s: float = 0.05, keep_last: int = 0,
+         meta: dict | None = None, io_hook=None, on_retry=None) -> str:
+    """Atomically write ``state`` and its manifest; returns the npz path.
+
+    ``io_hook(phase, attempt)`` (phases ``begin``/``payload``/``manifest``)
+    may raise to simulate a crash; OSErrors are retried ``retries`` times
+    with jittered exponential backoff starting at ``backoff_s``, reporting
+    each retried attempt to ``on_retry(attempt, exc)``. ``keep_last > 0``
+    prunes to the newest K checkpoints by step after a successful write.
+    """
+    path, payload, manifest = _prepare(directory, state, name, meta)
+    return _commit(directory, path, payload, manifest, retries=retries,
+                   backoff_s=backoff_s, keep_last=keep_last,
+                   io_hook=io_hook, on_retry=on_retry)
+
+
+class AsyncCheckpointWriter:
+    """Commit checkpoints off the training thread.
+
+    ``save`` costs the caller exactly one host snapshot (``np.asarray`` of
+    every leaf -- device->host copies, so later donation of the device
+    buffers is safe) and one bounded-queue put; the tmp+fsync+rename commit
+    protocol, retries, and retention pruning run on a single daemon worker
+    thread, in enqueue order. At most ``max_pending`` saves wait in the
+    queue (plus one in flight); a full queue blocks ``save`` -- bounded
+    host memory, never a dropped checkpoint.
+
+    Outcomes surface two ways: as history-event dicts via
+    :meth:`drain_events` (``checkpoint`` / ``checkpoint_retry`` /
+    ``checkpoint_failed``, same schema the synchronous trainer path emits)
+    and as :class:`CheckpointError` instances in :attr:`errors`. A commit
+    failure never kills the worker -- the run continues on the previous
+    checkpoint, exactly like the synchronous path.
+
+    ``flush`` blocks until every enqueued save is durable (the trainer's
+    barrier before restore decisions and at run end); ``close`` flushes,
+    stops the worker, and leaves the instance unusable.
+    """
+
+    def __init__(self, *, max_pending: int = 2, retries: int = 3,
+                 backoff_s: float = 0.05):
+        self._retries = retries
+        self._backoff_s = backoff_s
+        self._queue: queue_lib.Queue = queue_lib.Queue(max(1, max_pending))
+        self._events: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._pending = 0
+        self._closed = False
+        self.errors: list[CheckpointError] = []
+        self._worker = threading.Thread(
+            target=self._loop, name="ckpt-writer", daemon=True)
+        self._worker.start()
+
+    def save(self, directory: str, state: TrainState,
+             name: str | None = None, *, keep_last: int = 0,
+             meta: dict | None = None, io_hook=None) -> str:
+        """Snapshot ``state`` to host and enqueue the commit; returns the
+        npz path the worker will write. Blocks only on the snapshot and on
+        queue backpressure, never on payload IO."""
+        if self._closed:
+            raise CheckpointError("writer is closed")
+        path, payload, manifest = _prepare(directory, state, name, meta)
+        with self._lock:
+            self._pending += 1
+        self._queue.put((directory, path, payload, manifest, keep_last,
+                         io_hook))
+        return path
+
+    def pending(self) -> int:
+        """Saves enqueued or in flight (0 == everything durable)."""
+        with self._lock:
+            return self._pending
+
+    def drain_events(self, sink: Callable[[dict], None] | None = None
+                     ) -> list[dict]:
+        """Pop all completed-save events (oldest first); optionally feed
+        each to ``sink``. Called from the training thread, so history stays
+        single-writer."""
+        out = []
+        while True:
+            try:
+                ev = self._events.popleft()
+            except IndexError:
+                break
+            if sink is not None:
+                sink(ev)
+            out.append(ev)
+        return out
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until all enqueued saves are committed (or failed).
+        Returns False on timeout."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._pending == 0, timeout)
+
+    def close(self, timeout: float | None = None) -> None:
+        """Flush, stop the worker, release the thread. Idempotent."""
+        if self._closed:
+            return
+        self.flush(timeout)
+        self._closed = True
+        self._queue.put(None)
+        self._worker.join(timeout)
+
+    def _loop(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            directory, path, payload, manifest, keep_last, io_hook = job
+            step = manifest["step"]
+            try:
+                _commit(directory, path, payload, manifest,
+                        retries=self._retries, backoff_s=self._backoff_s,
+                        keep_last=keep_last, io_hook=io_hook,
+                        on_retry=lambda a, e: self._events.append(
+                            {"event": "checkpoint_retry", "step": step,
+                             "attempt": a, "error": str(e)}))
+                self._events.append({"event": "checkpoint", "step": step,
+                                     "path": os.path.basename(path)})
+            except CheckpointError as e:
+                self.errors.append(e)
+                self._events.append({"event": "checkpoint_failed",
+                                     "step": step, "error": str(e)})
+            except Exception as e:  # noqa: BLE001 -- worker must survive
+                err = CheckpointError(f"async save of step {step} failed: "
+                                      f"{type(e).__name__}: {e}")
+                self.errors.append(err)
+                self._events.append({"event": "checkpoint_failed",
+                                     "step": step, "error": str(err)})
+            finally:
+                with self._idle:
+                    self._pending -= 1
+                    self._idle.notify_all()
 
 
 def load_manifest(path: str) -> dict | None:

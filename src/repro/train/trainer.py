@@ -21,12 +21,24 @@ One ``train_step`` =
 
 The ``Trainer`` loops over the batch-size-control stages (paper §2.1) with
 ONE step function (jit re-specializes per stage batch shape), retries
-transient data failures with exponential backoff, writes crash-consistent
-checkpoints periodically and at stage boundaries, resumes mid-stage from
+transient data failures with jittered exponential backoff
+(``repro.utils.retry``), writes crash-consistent checkpoints periodically
+and at stage boundaries -- by default *asynchronously*, off the training
+thread (``checkpoint.AsyncCheckpointWriter``) -- resumes mid-stage from
 the newest *valid* checkpoint, and degrades the grad-sync strategy
 (torus2d -> ring -> psum) instead of aborting when the configured one
-cannot run on the current mesh/jaxlib (or a torus axis is down). Faults
-are injectable via ``repro.testing.chaos.FaultPlan`` for chaos testing.
+cannot run on the current mesh/jaxlib (or a torus axis is down).
+
+``run`` itself is a **supervised recovery loop** (``repro.train.elastic``,
+docs/robustness.md "Elastic recovery"): when the supervisor flags a
+*permanent* failure mid-run -- a torus axis newly down, an unbroken streak
+of guard-skipped steps, repeated step timeouts -- the trainer re-resolves
+the sync strategy against the enlarged down-axis set, rebuilds the jitted
+step for the degraded mesh, restores the newest valid checkpoint, and
+re-enters the step loop in the same process; only an exhausted recovery
+budget (or recovery without any checkpoint) aborts. Faults, including the
+permanent classes, are injectable via ``repro.testing.chaos.FaultPlan``
+for chaos testing.
 """
 
 from __future__ import annotations
@@ -51,7 +63,9 @@ from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core.topology import TorusGrid, select_grid
 from repro.testing.chaos import RETRYABLE
 from repro.train import checkpoint
+from repro.train.elastic import ElasticConfig, PermanentFailure, Supervisor
 from repro.train.state import TrainState
+from repro.utils.retry import retry_call
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +102,11 @@ class TrainerConfig:
     ckpt_every_steps: int = 0           # 0: stage boundaries only
     ckpt_keep_last: int = 3
     ckpt_retries: int = 3
+    ckpt_async: bool = True             # commit off the training thread
+    ckpt_max_pending: int = 2           # async writer queue bound
     data_retries: int = 3
     retry_backoff_s: float = 0.05       # base of the exponential backoff
+    elastic: ElasticConfig = ElasticConfig()  # mid-run recovery supervisor
 
 
 def make_train_step(loss_fn: Callable, mesh, dp_axes: tuple[str, ...],
@@ -199,56 +216,110 @@ class Trainer:
 
     def run(self, state: TrainState, max_steps: int | None = None,
             log: Callable = print, resume: bool = False):
-        """Run the plan. Returns ``(state, history)``.
+        """Run the plan under elastic supervision. Returns
+        ``(state, history)``.
 
         ``history`` holds per-step metric rows (every ``log_every`` steps,
         at stage ends, and on every skipped step) interleaved with event
         rows (``{"event": ...}``: grad-sync downgrades, data retries,
-        checkpoint saves/recoveries, resume). ``resume=True`` restores the
-        newest *valid* checkpoint from ``checkpoint_dir`` and fast-forwards
-        the plan to the exact mid-stage step.
+        checkpoint saves/recoveries, resume, ``elastic_failure`` /
+        ``elastic_recovery``). ``resume=True`` restores the newest *valid*
+        checkpoint from ``checkpoint_dir`` and fast-forwards the plan to
+        the exact mid-stage step.
+
+        On a :class:`~repro.train.elastic.PermanentFailure` the loop
+        re-resolves the sync strategy against the accumulated down axes,
+        rebuilds the step fn, rolls back to the newest valid checkpoint,
+        and continues in-process; after a recovery, step rows for the
+        replayed span appear twice in ``history`` (pre- and post-rollback).
         """
         history: list[dict] = []
 
-        def event(kind: str, **kw):
-            rec = {"event": kind, **kw}
+        def event(etype: str, **kw):
+            rec = {"event": etype, **kw}
             history.append(rec)
-            log(f"[{kind}] " + " ".join(f"{k}={v}" for k, v in kw.items()))
+            log(f"[{etype}] " + " ".join(f"{k}={v}" for k, v in kw.items()))
 
-        # -- graceful grad-sync degradation (docs/robustness.md) ----------
+        cfg = self.cfg
         grid = select_grid(self.dp_axes)
-        down = tuple(getattr(self.fault_plan, "down_axes", ()) or ())
-        sync_cfg, sync_events = grad_sync_lib.resolve_sync_config(
-            self.cfg.grad_sync, grid, self.mesh, self.dp_axes,
-            down_axes=down)
-        for ev in sync_events:
-            ev = dict(ev)
-            event(ev.pop("event"), **ev)
-        cfg = dataclasses.replace(self.cfg, grad_sync=sync_cfg)
+        if self.fault_plan is None:
+            initial_down: tuple[str, ...] = ()
+        elif hasattr(self.fault_plan, "down_axes_at"):
+            initial_down = tuple(self.fault_plan.down_axes_at(0))
+        else:
+            initial_down = tuple(getattr(self.fault_plan, "down_axes", ())
+                                 or ())
+        supervisor = Supervisor(cfg.elastic, initial_down_axes=initial_down)
 
-        # ONE step fn for every stage: jit re-specializes per batch shape.
-        # (A per-global-batch cache here would store identical fns -- the
-        # builder never sees the batch size -- while hiding the per-stage
-        # recompile behind a dict hit.)
-        fn = make_train_step(self.loss_fn, self.mesh, self.dp_axes, cfg,
-                             grid=grid)
-
-        start_step = 0
-        if resume and self.checkpoint_dir:
-            path = checkpoint.latest_valid(
-                self.checkpoint_dir, like=state,
-                on_skip=lambda p, reason: event(
-                    "checkpoint_rejected", path=os.path.basename(p),
-                    reason=reason))
-            if path is not None:
-                state = checkpoint.restore(path, state)
-                start_step = int(state.step)
-                event("resume", path=os.path.basename(path),
-                      step=start_step)
+        writer = None
+        if self.checkpoint_dir and cfg.ckpt_async:
+            writer = checkpoint.AsyncCheckpointWriter(
+                max_pending=cfg.ckpt_max_pending, retries=cfg.ckpt_retries,
+                backoff_s=cfg.retry_backoff_s)
 
         data_fn = (self.fault_plan.wrap_data_fn(self.data_fn)
                    if self.fault_plan is not None else self.data_fn)
 
+        try:
+            start_step = 0
+            if resume and self.checkpoint_dir:
+                path = checkpoint.latest_valid(
+                    self.checkpoint_dir, like=state,
+                    on_skip=lambda p, reason: event(
+                        "checkpoint_rejected", path=os.path.basename(p),
+                        reason=reason))
+                if path is not None:
+                    state = checkpoint.restore(path, state)
+                    start_step = int(state.step)
+                    event("resume", path=os.path.basename(path),
+                          step=start_step)
+
+            # elastic recovery line: a permanent failure heals by rolling
+            # back to a checkpoint, so commit one before the first
+            # (buffer-donating) step consumes the initial state
+            if (cfg.elastic.enabled and self.checkpoint_dir
+                    and checkpoint.latest(self.checkpoint_dir) is None):
+                self._save_checkpoint(state, None, event, writer)
+
+            # -- supervised recovery loop (docs/robustness.md) ------------
+            while True:
+                context = ("startup" if supervisor.recoveries == 0
+                           else "elastic")
+                sync_cfg, sync_events = grad_sync_lib.resolve_sync_config(
+                    cfg.grad_sync, grid, self.mesh, self.dp_axes,
+                    down_axes=supervisor.down_axes, context=context)
+                for ev in sync_events:
+                    ev = dict(ev)
+                    event(ev.pop("event"), **ev)
+                run_cfg = dataclasses.replace(cfg, grad_sync=sync_cfg)
+                # ONE step fn for every stage of this attempt: jit
+                # re-specializes per batch shape. (A per-global-batch cache
+                # here would store identical fns -- the builder never sees
+                # the batch size -- while hiding the per-stage recompile
+                # behind a dict hit.)
+                fn = make_train_step(self.loss_fn, self.mesh, self.dp_axes,
+                                     run_cfg, grid=grid)
+                try:
+                    state = self._run_steps(
+                        fn, state, run_cfg, data_fn, start_step, max_steps,
+                        supervisor, writer, history, event, log)
+                    return state, history
+                except PermanentFailure as failure:
+                    state, start_step = self._recover(
+                        state, failure, supervisor, writer, event)
+        finally:
+            if writer is not None:
+                writer.close()
+                self._drain(writer, event)
+
+    # -- the per-attempt step loop ----------------------------------------
+
+    def _run_steps(self, fn, state: TrainState, cfg: TrainerConfig, data_fn,
+                   start_step: int, max_steps: int | None,
+                   supervisor: Supervisor, writer, history: list, event,
+                   log) -> TrainState:
+        """One supervised attempt over the plan; raises
+        :class:`PermanentFailure` when the supervisor flags one."""
         for stage in self.plan.stages:
             gb = stage.global_batch
             if start_step >= stage.first_step + stage.num_steps:
@@ -258,18 +329,30 @@ class Trainer:
                 if gstep < start_step:
                     continue   # fast-forward to the exact mid-stage step
                 if max_steps is not None and gstep >= max_steps:
-                    return state, history
+                    return state
+                # pre-step health probe: a collective launched over a dead
+                # axis wedges the mesh, so detection must win that race
+                failure = supervisor.check_health(gstep, self.fault_plan)
+                if failure is not None:
+                    raise failure
                 epoch = epoch_of(self.plan, stage, i)
                 batch = self._fetch_batch(data_fn, gstep, gb, event)
                 if self.fault_plan is not None:
                     batch = self.fault_plan.corrupt_batch(gstep, batch)
+                t0 = time.monotonic()
                 state, metrics = fn(state, batch,
                                     jnp.asarray(epoch, jnp.float32),
                                     jnp.asarray(gb, jnp.float32))
                 done = gstep + 1
                 # reading the flag forces a host sync; without the guard
-                # there is nothing to read and dispatch stays async
+                # there is nothing to read and dispatch stays async (then
+                # elapsed_s covers dispatch only -- wall-clock timeout
+                # detection needs the guard's sync or injected signals)
                 skipped = int(metrics["skipped"]) if cfg.guard.enabled else 0
+                elapsed = time.monotonic() - t0
+                timed_out = (self.fault_plan is not None
+                             and hasattr(self.fault_plan, "step_timed_out")
+                             and self.fault_plan.step_timed_out(gstep))
                 if (done % cfg.log_every == 0 or i == stage.num_steps - 1
                         or skipped):
                     m = {k: float(v) for k, v in metrics.items()}
@@ -282,43 +365,109 @@ class Trainer:
                         f"mom {m['momentum']:.3f}"
                         + (f" SKIPPED (nonfinite={m['nonfinite_count']}, "
                            f"scale->{m['loss_scale']:g})" if skipped else ""))
+                # detection strictly precedes the periodic save: a failure
+                # here must not first persist a checkpoint whose step
+                # counter has advanced past the streak's skipped updates
+                failure = supervisor.observe_step(
+                    gstep, skipped=bool(skipped), timed_out=timed_out,
+                    elapsed_s=elapsed)
+                if failure is not None:
+                    raise failure
                 if (self.checkpoint_dir and cfg.ckpt_every_steps
-                        and done % cfg.ckpt_every_steps == 0):
-                    self._save_checkpoint(state, stage, event)
+                        and done % cfg.ckpt_every_steps == 0
+                        and supervisor.healthy):
+                    self._save_checkpoint(state, stage, event, writer)
+                if writer is not None:
+                    self._drain(writer, event)
             # stage-boundary save, unless the periodic save just covered it
             if self.checkpoint_dir and not (
                     cfg.ckpt_every_steps
                     and int(state.step) % cfg.ckpt_every_steps == 0):
-                self._save_checkpoint(state, stage, event)
-        return state, history
+                self._save_checkpoint(state, stage, event, writer)
+        return state
 
     # -- recovery paths ---------------------------------------------------
 
-    def _fetch_batch(self, data_fn, gstep: int, gb: int, event):
-        """Fetch with retry + exponential backoff on transient failures."""
-        delay = self.cfg.retry_backoff_s
-        last: Exception | None = None
-        for attempt in range(self.cfg.data_retries + 1):
-            try:
-                return data_fn(gstep, gb)
-            except RETRYABLE as e:
-                last = e
-                event("data_retry", step=gstep, attempt=attempt,
-                      error=f"{type(e).__name__}: {e}")
-                if attempt < self.cfg.data_retries:
-                    time.sleep(delay)
-                    delay *= 2
-        raise RuntimeError(
-            f"data_fn failed at step {gstep} after "
-            f"{self.cfg.data_retries + 1} attempts") from last
+    def _recover(self, state: TrainState, failure: PermanentFailure,
+                 supervisor: Supervisor, writer, event
+                 ) -> tuple[TrainState, int]:
+        """Roll back past a permanent failure: flush in-flight saves, fold
+        the failure into supervisor state, restore the newest valid
+        checkpoint. Returns ``(state, start_step)`` for the next attempt;
+        raises ``RuntimeError`` when recovery is impossible."""
+        event("elastic_failure", kind=failure.kind, step=failure.step,
+              down_axes=list(failure.down_axes), detail=failure.detail)
+        if supervisor.exhausted:
+            raise RuntimeError(
+                f"elastic recovery budget exhausted "
+                f"({supervisor.cfg.max_recoveries} recoveries) at step "
+                f"{failure.step}: {failure.kind}") from failure
+        if writer is not None:
+            # durability barrier: every enqueued save must be committed (or
+            # failed) before latest_valid decides where to roll back to
+            writer.flush()
+            self._drain(writer, event)
+        attempt = supervisor.start_recovery(failure)
+        path = None
+        if self.checkpoint_dir:
+            path = checkpoint.latest_valid(
+                self.checkpoint_dir, like=state,
+                on_skip=lambda p, reason: event(
+                    "checkpoint_rejected", path=os.path.basename(p),
+                    reason=reason))
+        if path is None:
+            raise RuntimeError(
+                f"permanent failure at step {failure.step} "
+                f"({failure.kind}) but no valid checkpoint to roll back "
+                "to -- set checkpoint_dir to enable elastic recovery"
+            ) from failure
+        state = retry_call(
+            lambda: checkpoint.restore(path, state),
+            retries=self.cfg.ckpt_retries,
+            backoff_s=self.cfg.retry_backoff_s, retry_on=(OSError,),
+            seed=failure.step)
+        start_step = int(state.step)
+        event("elastic_recovery", attempt=attempt, step=start_step,
+              path=os.path.basename(path),
+              down_axes=list(supervisor.down_axes))
+        return state, start_step
 
-    def _save_checkpoint(self, state: TrainState, stage, event) -> None:
+    def _fetch_batch(self, data_fn, gstep: int, gb: int, event):
+        """Fetch with the shared jittered-backoff retry helper."""
+        try:
+            return retry_call(
+                lambda: data_fn(gstep, gb),
+                retries=self.cfg.data_retries,
+                backoff_s=self.cfg.retry_backoff_s, retry_on=RETRYABLE,
+                on_retry=lambda attempt, e: event(
+                    "data_retry", step=gstep, attempt=attempt,
+                    error=f"{type(e).__name__}: {e}"),
+                seed=gstep)
+        except RETRYABLE as e:
+            raise RuntimeError(
+                f"data_fn failed at step {gstep} after "
+                f"{self.cfg.data_retries + 1} attempts") from e
+
+    def _save_checkpoint(self, state: TrainState, stage, event,
+                         writer=None) -> None:
         """Crash-consistent save; a checkpoint failure is an event, not a
-        training abort (the run continues from the previous checkpoint)."""
+        training abort (the run continues from the previous checkpoint).
+        With ``writer`` the commit runs off-thread and its outcome events
+        arrive via :meth:`_drain`."""
         hook = (self.fault_plan.checkpoint_io_hook
                 if self.fault_plan is not None else None)
-        meta = {"stage_end_epoch": stage.stage.end_epoch,
-                "global_batch": stage.global_batch}
+        meta = ({"stage_end_epoch": stage.stage.end_epoch,
+                 "global_batch": stage.global_batch}
+                if stage is not None else {"initial": True})
+        if writer is not None:
+            try:
+                writer.save(self.checkpoint_dir, state,
+                            keep_last=self.cfg.ckpt_keep_last, meta=meta,
+                            io_hook=hook)
+            except checkpoint.CheckpointError as e:
+                event("checkpoint_failed", step=int(state.step),
+                      error=str(e))
+            return
         try:
             path = checkpoint.save(
                 self.checkpoint_dir, state,
@@ -333,3 +482,11 @@ class Trainer:
                   path=os.path.basename(path))
         except checkpoint.CheckpointError as e:
             event("checkpoint_failed", step=int(state.step), error=str(e))
+
+    @staticmethod
+    def _drain(writer, event) -> None:
+        """Re-emit completed async-save outcomes as history events (on the
+        training thread, keeping history single-writer)."""
+        for ev in writer.drain_events():
+            ev = dict(ev)
+            event(ev.pop("event"), **ev)

@@ -1,0 +1,1 @@
+"""Small cross-layer utilities (no jax dependency at import time)."""

@@ -1,0 +1,447 @@
+"""Elastic self-healing layer (docs/robustness.md "Elastic recovery"):
+permanent-failure detection, mid-run strategy re-resolution + checkpoint
+rollback, and the async off-thread checkpoint writer."""
+
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core.grad_sync import GradSyncConfig
+from repro.core.schedules import BatchSchedule, BatchStage
+from repro.core.batch_control import build_plan
+from repro.data.synthetic import SyntheticImageNet
+from repro.models import resnet
+from repro.testing.chaos import FaultPlan
+from repro.train import checkpoint
+from repro.train.checkpoint import AsyncCheckpointWriter
+from repro.train.elastic import ElasticConfig, PermanentFailure, Supervisor
+from repro.train.state import TrainState
+from repro.train.trainer import GuardConfig, Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((2, 4), ("dy", "dx"))
+
+
+CFG = resnet.ResNetConfig.tiny(num_classes=4)
+DATA = SyntheticImageNet(num_classes=4, image_size=32, noise=0.3)
+
+
+def resnet_loss(params, batch, dp_axes):
+    images, labels = batch
+    logits = resnet.apply(params, images, CFG, dp_axes=dp_axes)
+    return losses.label_smoothing_xent(
+        logits, labels, 0.1), jnp.zeros((), jnp.float32)
+
+
+def make_trainer(mesh, *, max_steps, ckpt_dir=None, fault_plan=None,
+                 strategy="torus2d", ckpt_every=0,
+                 elastic=ElasticConfig(), ckpt_async=True, keep_last=10):
+    sched = BatchSchedule((BatchStage(0, 1.0, 2),))
+    plan = build_plan(sched, dataset_size=256, n_workers=8,
+                      max_steps=max_steps)
+    tcfg = TrainerConfig(
+        grad_sync=GradSyncConfig(strategy=strategy), guard=GuardConfig(),
+        log_every=1000, ckpt_every_steps=ckpt_every,
+        ckpt_keep_last=keep_last, ckpt_async=ckpt_async,
+        retry_backoff_s=1e-4, elastic=elastic)
+    return Trainer(mesh=mesh, dp_axes=("dy", "dx"), loss_fn=resnet_loss,
+                   cfg=tcfg, plan=plan,
+                   data_fn=lambda i, gb: DATA.batch(i, gb),
+                   checkpoint_dir=ckpt_dir, fault_plan=fault_plan)
+
+
+def fresh_state():
+    return TrainState.create(resnet.init(jax.random.key(0), CFG))
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def events_of(history, kind):
+    return [h for h in history if h.get("event") == kind]
+
+
+# ---------------------------------------------------------------------------
+# Supervisor unit semantics (pure python, no mesh)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_axis_down_detection():
+    sup = Supervisor(ElasticConfig(), initial_down_axes=("dz",))
+    plan = FaultPlan(down_axes=("dz",), axis_down_events=(("dy", 5),))
+    assert sup.check_health(4, plan) is None        # dz already known
+    failure = sup.check_health(5, plan)
+    assert isinstance(failure, PermanentFailure)
+    assert failure.kind == "axis_down"
+    assert failure.down_axes == ("dy",) and failure.step == 5
+    sup.start_recovery(failure)
+    assert sup.down_axes == ("dy", "dz")
+    assert sup.check_health(6, plan) is None        # dy now known too
+
+
+def test_supervisor_streak_thresholds_and_reset():
+    cfg = ElasticConfig(max_consecutive_nonfinite=3,
+                        max_consecutive_timeouts=2)
+    sup = Supervisor(cfg)
+    assert sup.observe_step(0, skipped=True) is None
+    assert sup.observe_step(1, skipped=True) is None
+    assert not sup.healthy
+    assert sup.observe_step(2, skipped=False) is None   # streak broken
+    assert sup.healthy
+    assert sup.observe_step(3, skipped=True) is None
+    assert sup.observe_step(4, skipped=True) is None
+    failure = sup.observe_step(5, skipped=True)
+    assert failure is not None and failure.kind == "nonfinite_streak"
+    sup.start_recovery(failure)
+    assert sup.healthy                                  # streaks reset
+    assert sup.observe_step(6, skipped=False, timed_out=True) is None
+    timeout = sup.observe_step(7, skipped=False, timed_out=True)
+    assert timeout is not None and timeout.kind == "timeout"
+
+
+def test_supervisor_wall_clock_timeout_and_budget():
+    cfg = ElasticConfig(max_consecutive_timeouts=1, step_timeout_s=0.5,
+                        max_recoveries=1)
+    sup = Supervisor(cfg)
+    assert sup.observe_step(0, skipped=False, elapsed_s=0.4) is None
+    failure = sup.observe_step(1, skipped=False, elapsed_s=0.9)
+    assert failure is not None and failure.kind == "timeout"
+    assert not sup.exhausted
+    assert sup.start_recovery(failure) == 1
+    assert sup.exhausted
+    disabled = Supervisor(ElasticConfig(enabled=False))
+    assert disabled.observe_step(0, skipped=True, timed_out=True) is None
+    assert disabled.check_health(0, FaultPlan(down_axes=("dy",))) is None
+
+
+def test_fault_plan_permanent_signals():
+    plan = FaultPlan(axis_down_events=(("dy", 3), ("dx", 7)),
+                     timeout_steps=(4,), timeouts_per_step=2)
+    assert plan.down_axes_at(2) == ()
+    assert plan.down_axes_at(3) == ("dy",)
+    assert plan.down_axes_at(7) == ("dx", "dy")
+    assert not plan.step_timed_out(3)
+    assert plan.step_timed_out(4) and plan.step_timed_out(4)
+    assert not plan.step_timed_out(4)       # consumed: replay runs clean
+    once = FaultPlan(nan_grad_steps=(1,), grad_fault_once=True)
+    batch = (jnp.ones((4, 2)), jnp.zeros((4,), jnp.int32))
+    poisoned = once.corrupt_batch(1, batch)
+    assert not bool(jnp.isfinite(poisoned[0]).all())
+    replay = once.corrupt_batch(1, batch)
+    assert bool(jnp.isfinite(replay[0]).all())
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: permanent axis loss mid-run -> downgrade + rollback
+# -> completion, bit-exact vs a direct run of the degraded strategy from
+# the last valid checkpoint
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_permanent_axis_loss_recovers_bit_exact(mesh, tmp_path):
+    """Axis "dy" dies permanently at step 6. The run must (1) complete all
+    10 steps in-process, (2) emit a *mid-run* torus2d->ring downgrade, and
+    (3) end bit-identical to a run launched with ring directly from the
+    last valid checkpoint (step 4)."""
+    run_dir = str(tmp_path / "run")
+    faults = FaultPlan(axis_down_events=(("dy", 6),))
+    trainer = make_trainer(mesh, max_steps=10, ckpt_dir=run_dir,
+                           fault_plan=faults, ckpt_every=4)
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert int(state.step) == 10
+
+    failure = events_of(history, "elastic_failure")
+    assert len(failure) == 1
+    assert failure[0]["kind"] == "axis_down" and failure[0]["step"] == 6
+    assert failure[0]["down_axes"] == ["dy"]
+    recovery = events_of(history, "elastic_recovery")
+    assert len(recovery) == 1
+    assert recovery[0]["step"] == 4 and recovery[0]["attempt"] == 1
+    downgrade = events_of(history, "grad_sync_downgrade")
+    assert len(downgrade) == 1
+    assert (downgrade[0]["from"], downgrade[0]["to"]) == ("torus2d", "ring")
+    # the downgrade happened MID-RUN: context says it came from the elastic
+    # re-resolution, and it follows the step-6 failure in the event stream
+    # (the startup resolution, with no axis down yet, emitted nothing)
+    assert downgrade[0]["context"] == "elastic"
+    assert history.index(downgrade[0]) > history.index(failure[0])
+
+    # reference: ring from the last valid checkpoint, in a fresh dir
+    ref_dir = str(tmp_path / "ref")
+    os.makedirs(ref_dir)
+    ckpt4 = os.path.join(run_dir, "step_00000004.npz")
+    for src in (ckpt4, checkpoint.manifest_path(ckpt4)):
+        shutil.copy(src, ref_dir)
+    ref = make_trainer(mesh, max_steps=10, ckpt_dir=ref_dir,
+                       strategy="ring", ckpt_every=4)
+    ref_state, ref_history = ref.run(fresh_state(), resume=True,
+                                     log=lambda *a: None)
+    assert events_of(ref_history, "resume")[0]["step"] == 4
+    assert int(ref_state.step) == 10
+    assert_trees_equal(state.params, ref_state.params)
+    assert_trees_equal(state.opt_state, ref_state.opt_state)
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_nonfinite_streak_rollback_bit_exact(mesh, tmp_path):
+    """An unbroken NaN streak (sick node) crosses the permanence threshold;
+    the run rolls back to the pre-streak checkpoint and — because the
+    replay is clean (node replaced: grad_fault_once) — finishes
+    bit-identical to a fault-free run: no update is lost to the skips."""
+    faults = FaultPlan(nan_grad_steps=(5, 6, 7), grad_fault_once=True)
+    trainer = make_trainer(
+        mesh, max_steps=10, ckpt_dir=str(tmp_path), fault_plan=faults,
+        ckpt_every=4, elastic=ElasticConfig(max_consecutive_nonfinite=3))
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert int(state.step) == 10
+
+    failure = events_of(history, "elastic_failure")[0]
+    assert failure["kind"] == "nonfinite_streak" and failure["step"] == 7
+    assert events_of(history, "elastic_recovery")[0]["step"] == 4
+    # no strategy change: the mesh is intact, only the data was sick
+    assert events_of(history, "grad_sync_downgrade") == []
+
+    clean = make_trainer(mesh, max_steps=10)
+    clean_state, _ = clean.run(fresh_state(), log=lambda *a: None)
+    assert_trees_equal(state.params, clean_state.params)
+    assert_trees_equal(state.opt_state, clean_state.opt_state)
+
+
+@pytest.mark.multidevice
+def test_timeout_streak_triggers_rollback(mesh, tmp_path):
+    faults = FaultPlan(timeout_steps=(3, 4, 5))
+    trainer = make_trainer(
+        mesh, max_steps=8, ckpt_dir=str(tmp_path), fault_plan=faults,
+        ckpt_every=2, elastic=ElasticConfig(max_consecutive_timeouts=3))
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert int(state.step) == 8
+    failure = events_of(history, "elastic_failure")[0]
+    assert failure["kind"] == "timeout" and failure["step"] == 5
+    assert events_of(history, "elastic_recovery")[0]["step"] == 2
+
+
+@pytest.mark.multidevice
+def test_recovery_budget_exhaustion_aborts(mesh, tmp_path):
+    """A deterministic poison source (NOT once-only) reappears after every
+    rollback; the supervisor must stop after max_recoveries instead of
+    looping forever."""
+    faults = FaultPlan(nan_grad_steps=(5, 6, 7))
+    trainer = make_trainer(
+        mesh, max_steps=10, ckpt_dir=str(tmp_path), fault_plan=faults,
+        ckpt_every=4,
+        elastic=ElasticConfig(max_consecutive_nonfinite=3,
+                              max_recoveries=2))
+    with pytest.raises(RuntimeError, match="recovery budget exhausted"):
+        trainer.run(fresh_state(), log=lambda *a: None)
+
+
+@pytest.mark.multidevice
+def test_recovery_without_checkpoint_dir_aborts(mesh):
+    faults = FaultPlan(axis_down_events=(("dy", 2),))
+    trainer = make_trainer(mesh, max_steps=4, fault_plan=faults)
+    with pytest.raises(RuntimeError, match="no valid checkpoint"):
+        trainer.run(fresh_state(), log=lambda *a: None)
+
+
+@pytest.mark.multidevice
+def test_persistent_ckpt_dir_failure_run_still_completes(mesh, tmp_path):
+    """The checkpoint filesystem dies for good after the first two saves:
+    every later save fails (events, not aborts), the run completes, and
+    latest_valid still resolves to the last pre-failure checkpoint."""
+    faults = FaultPlan(ckpt_dir_fail_from=2)
+    trainer = make_trainer(mesh, max_steps=8, ckpt_dir=str(tmp_path),
+                           fault_plan=faults, ckpt_every=2)
+    state, history = trainer.run(fresh_state(), log=lambda *a: None)
+    assert int(state.step) == 8
+    assert events_of(history, "checkpoint_failed")
+    ok_steps = sorted(ev["step"] for ev in events_of(history, "checkpoint"))
+    assert ok_steps == [0, 2]            # initial + first periodic only
+    best = checkpoint.latest_valid(str(tmp_path), like=state)
+    assert best is not None and best.endswith("step_00000002.npz")
+
+
+# ---------------------------------------------------------------------------
+# Async checkpoint writer
+# ---------------------------------------------------------------------------
+
+def small_state(step=0):
+    s = TrainState.create(resnet.init(jax.random.key(1), CFG))
+    return TrainState(s.params, s.opt_state, jnp.asarray(step, jnp.int32),
+                      s.loss_scale, s.good_steps)
+
+
+def test_async_writer_matches_sync_writer(tmp_path):
+    """Files, manifests, and every read-side behavior (latest /
+    latest_valid / restore) must be indistinguishable from the synchronous
+    writer's output."""
+    sync_dir, async_dir = str(tmp_path / "sync"), str(tmp_path / "async")
+    states = [small_state(s) for s in (1, 2, 3)]
+    for st in states:
+        checkpoint.save(sync_dir, st, meta={"k": 1})
+    w = AsyncCheckpointWriter()
+    for st in states:
+        w.save(async_dir, st, meta={"k": 1})
+    assert w.flush(30)
+    w.close()
+    assert w.errors == []
+    assert sorted(os.listdir(sync_dir)) == sorted(os.listdir(async_dir))
+    for d in (sync_dir, async_dir):
+        assert checkpoint.latest(d).endswith("step_00000003.npz")
+        assert checkpoint.latest_valid(d, like=states[0]) \
+            == checkpoint.latest(d)
+    for name in os.listdir(sync_dir):
+        if name.endswith(checkpoint.MANIFEST_SUFFIX):
+            a = open(os.path.join(sync_dir, name), "rb").read()
+            b = open(os.path.join(async_dir, name), "rb").read()
+            assert a == b
+    assert_trees_equal(
+        checkpoint.restore(checkpoint.latest(sync_dir), states[0]).params,
+        checkpoint.restore(checkpoint.latest(async_dir), states[0]).params)
+
+
+def test_async_save_never_blocks_on_payload_io(tmp_path):
+    """The worker is frozen inside the payload write while the caller's
+    save() has already returned -- anything else would deadlock here."""
+    gate, entered = threading.Event(), threading.Event()
+
+    def hook(phase, attempt):
+        if phase == "payload":
+            entered.set()
+            assert gate.wait(30)
+
+    w = AsyncCheckpointWriter()
+    path = w.save(str(tmp_path), small_state(1), io_hook=hook)
+    # save() returned; the commit is demonstrably still in flight
+    assert entered.wait(30)
+    assert w.pending() == 1
+    assert not os.path.exists(path)
+    gate.set()
+    assert w.flush(30)
+    assert w.pending() == 0
+    w.close()
+    checkpoint.validate(path, like=small_state(1))
+
+
+def test_async_bounded_queue_applies_backpressure(tmp_path):
+    """With max_pending=1, a third save must block until the worker frees a
+    slot -- bounded host memory, never a dropped checkpoint."""
+    gate, entered = threading.Event(), threading.Event()
+
+    def hook(phase, attempt):
+        if phase == "payload":
+            entered.set()
+            assert gate.wait(30)
+
+    w = AsyncCheckpointWriter(max_pending=1)
+    w.save(str(tmp_path), small_state(1), io_hook=hook)   # worker holds it
+    assert entered.wait(30)
+    w.save(str(tmp_path), small_state(2))                 # fills the queue
+
+    third_done = threading.Event()
+    t = threading.Thread(
+        target=lambda: (w.save(str(tmp_path), small_state(3)),
+                        third_done.set()),
+        daemon=True)
+    t.start()
+    assert not third_done.wait(0.3)       # blocked on the full queue
+    assert w.pending() == 3
+    gate.set()
+    assert third_done.wait(30)
+    assert w.flush(30)
+    w.close()
+    steps = [s for s, _ in checkpoint._candidates(str(tmp_path))]
+    assert steps == [1, 2, 3]             # committed in enqueue order
+
+
+def test_async_survives_midwrite_crash_and_retries(tmp_path):
+    plan = FaultPlan(ckpt_crash_writes=(0,), ckpt_crashes_per_write=2)
+    w = AsyncCheckpointWriter(retries=3, backoff_s=1e-4)
+    path = w.save(str(tmp_path), small_state(1),
+                  io_hook=plan.checkpoint_io_hook)
+    assert w.flush(30)
+    w.close()
+    events = w.drain_events()
+    kinds = [e["event"] for e in events]
+    assert kinds.count("checkpoint_retry") == 2
+    assert kinds[-1] == "checkpoint"
+    assert w.errors == []
+    checkpoint.validate(path, like=small_state(1))
+
+
+def test_async_persistent_failure_surfaces_and_preserves_previous(tmp_path):
+    prev = checkpoint.save(str(tmp_path), small_state(1))
+    plan = FaultPlan(ckpt_dir_fail_from=0)
+    w = AsyncCheckpointWriter(retries=2, backoff_s=1e-4)
+    w.save(str(tmp_path), small_state(2), io_hook=plan.checkpoint_io_hook)
+    assert w.flush(30)
+    w.close()
+    events = w.drain_events()
+    assert events[-1]["event"] == "checkpoint_failed"
+    assert len(w.errors) == 1
+    assert isinstance(w.errors[0], checkpoint.CheckpointError)
+    # the failed save left no torso and the previous checkpoint still wins
+    assert checkpoint.latest_valid(str(tmp_path), like=small_state(1)) \
+        == prev
+    # a save after close() is a clean error, not a hang
+    with pytest.raises(checkpoint.CheckpointError, match="closed"):
+        w.save(str(tmp_path), small_state(3))
+
+
+# ---------------------------------------------------------------------------
+# Restore-after-partial-commit (satellite): torn payloads and manifest-less
+# torsos must never load garbage
+# ---------------------------------------------------------------------------
+
+def test_restore_after_partial_commit_rejected_with_fallback(tmp_path):
+    """A payload truncated *after* its manifest committed must raise
+    CheckpointCorruptError (CRC/readability, not garbage params), and
+    latest_valid must fall back to the previous checkpoint."""
+    p1 = checkpoint.save(str(tmp_path), small_state(1))
+    p2 = checkpoint.save(str(tmp_path), small_state(2))
+    assert os.path.exists(checkpoint.manifest_path(p2))
+    with open(p2, "r+b") as f:
+        f.truncate(os.path.getsize(p2) * 2 // 3)
+    with pytest.raises(checkpoint.CheckpointCorruptError,
+                       match="unreadable payload|CRC|missing"):
+        checkpoint.restore(p2, small_state(2))
+    skipped = []
+    best = checkpoint.latest_valid(str(tmp_path), like=small_state(1),
+                                   on_skip=lambda p, r: skipped.append(p))
+    assert best == p1 and skipped == [p2]
+    restored = checkpoint.restore(best, small_state(1))
+    assert int(restored.step) == 1
+
+
+def test_partial_commit_payload_without_manifest_is_skipped(tmp_path):
+    """The other torn window: payload renamed into place but the manifest
+    write crashed (persistently). The npz torso exists under a committed
+    name yet must be treated as uncommitted by latest_valid."""
+    p1 = checkpoint.save(str(tmp_path), small_state(1))
+
+    def manifest_crash(phase, attempt):
+        if phase == "manifest":
+            raise OSError("injected manifest-write crash")
+
+    with pytest.raises(checkpoint.CheckpointError):
+        checkpoint.save(str(tmp_path), small_state(2), retries=1,
+                        backoff_s=1e-4, io_hook=manifest_crash)
+    torso = os.path.join(str(tmp_path), "step_00000002.npz")
+    assert os.path.exists(torso)
+    assert not os.path.exists(checkpoint.manifest_path(torso))
+    with pytest.raises(checkpoint.CheckpointCorruptError, match="manifest"):
+        checkpoint.validate(torso)
+    skipped = []
+    best = checkpoint.latest_valid(str(tmp_path), like=small_state(1),
+                                   on_skip=lambda p, r: skipped.append(p))
+    assert best == p1 and skipped == [torso]

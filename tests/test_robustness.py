@@ -167,6 +167,22 @@ def test_guarded_step_is_bit_identical_when_clean(mesh):
     assert_trees_equal(outs[True].opt_state, outs[False].opt_state)
 
 
+@pytest.mark.multidevice
+def test_fp16_style_guard_settles_at_high_scale(mesh):
+    """The paper trains in fp16 with loss scaling; our fp16-style config
+    starts at the standard ``init_scale=2**15``. With clean numerics the
+    guard must never skip and the scale must settle at (not below) init --
+    regrowth attempts every ``growth_interval`` clean steps are capped at
+    ``max_scale``, never a sawtooth of overflow/backoff."""
+    guard = GuardConfig(init_scale=2.0 ** 15, growth_interval=4)
+    trainer = make_trainer(mesh, max_steps=12, guard=guard)
+    state, history = trainer.run(fresh_state(loss_scale=guard.init_scale),
+                                 log=lambda *a: None)
+    assert int(state.step) == 12
+    assert [h for h in history if h.get("skipped")] == []
+    assert float(state.loss_scale) >= guard.init_scale
+
+
 # ---------------------------------------------------------------------------
 # Graceful grad-sync degradation
 # ---------------------------------------------------------------------------
@@ -197,7 +213,8 @@ def test_resolve_degrades_on_down_axis(mesh):
                 if e["event"] == "grad_sync_strategy_rejected"]
     assert rejected == ["torus2d", "hierarchical"]
     assert events[-1] == {"event": "grad_sync_downgrade",
-                          "from": "torus2d", "to": "ring"}
+                          "from": "torus2d", "to": "ring",
+                          "context": "startup"}
     # explicit ppermute ring pins dead neighbor links -> psum
     cfg2, _ = resolve_sync_config(
         GradSyncConfig(strategy="torus2d", lowering="ring"), grid, mesh,
