@@ -1,10 +1,16 @@
 """Render §Dry-run and §Roofline markdown tables from the dry-run JSONs.
 
     PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+
+``--metrics <run.jsonl>`` instead summarizes a training run's metrics
+JSONL (repro.obs, docs/observability.md) into the harness CSV contract
+(``name,us_per_call,derived``): mean per-step phase durations from the
+``step_phases`` rows plus every instrument in the final summary row.
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 
@@ -30,7 +36,62 @@ def dryrun_table(records) -> str:
     return "\n".join(lines)
 
 
+def metrics_rows(path: str) -> list[dict]:
+    """Summarize a metrics JSONL (rotation-aware) into harness CSV rows.
+
+    Per-phase means come from the ``step_phases`` rows; everything else
+    from the final ``summary`` snapshot -- time histograms render their
+    mean in µs, counters/gauges carry their value in ``derived`` (µs
+    column 0). ``derived`` never contains commas (CSV contract).
+    """
+    from repro.obs.sink import read_run
+
+    rows = read_run(path)
+    out = []
+    phases = [r for r in rows if r.get("metric") == "step_phases"]
+    if phases:
+        n = len(phases)
+        wall = sum(p["wall_s"] for p in phases)
+        out.append({"name": "obs/step_wall",
+                    "us_per_call": round(wall / n * 1e6, 1),
+                    "derived": f"steps={n}"})
+        for ph in ("data", "dispatch", "sync_wait", "log", "checkpoint"):
+            tot = sum(p["phases"].get(ph, 0.0) for p in phases)
+            out.append({"name": f"obs/phase_{ph}",
+                        "us_per_call": round(tot / n * 1e6, 1),
+                        "derived": (f"frac={tot / wall:.3f}" if wall
+                                    else "")})
+    summaries = [r for r in rows if r.get("kind") == "summary"]
+    if summaries:
+        for name, snap in summaries[-1]["metrics"].items():
+            kind = snap.get("type")
+            if kind == "histogram":
+                # mean in µs is only meaningful for the *_s time
+                # histograms, but count/derived stay correct regardless
+                out.append({"name": f"obs/{name}",
+                            "us_per_call": round(snap["mean"] * 1e6, 1),
+                            "derived": f"count={snap['count']}"})
+            elif kind == "counter":
+                out.append({"name": f"obs/{name}", "us_per_call": 0,
+                            "derived": f"count={int(snap['value'])}"})
+            elif kind == "gauge":
+                out.append({"name": f"obs/{name}", "us_per_call": 0,
+                            "derived": f"value={snap['value']:g}"})
+    return out
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default=None,
+                    help="summarize this metrics JSONL into "
+                         "name,us_per_call,derived CSV rows instead of "
+                         "rendering the dry-run report")
+    args = ap.parse_args()
+    if args.metrics:
+        print("name,us_per_call,derived")
+        for r in metrics_rows(args.metrics):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        return
     raw = []
     for path in sorted(glob.glob("experiments/dryrun/*.json")):
         with open(path) as f:

@@ -183,6 +183,42 @@ def sync_tree(grads, grid: TorusGrid, cfg: GradSyncConfig = GradSyncConfig()):
     return _sync_per_leaf(grads, grid, cfg)
 
 
+def record_bucket_metrics(grads_like, cfg: GradSyncConfig,
+                          registry) -> list[dict]:
+    """Publish the bucket schedule as gauges on a metrics registry
+    (repro.obs.metrics; docs/observability.md has the name table).
+
+    ``sync_tree`` itself runs inside jit/shard_map, so per-bucket numbers
+    can't be recorded at execution time -- but the schedule is a pure
+    host-side function of the gradient *structure* (``bucket_layout``),
+    which the trainer knows the moment it resolves the sync config. Called
+    with the params tree (same treedef as the grads) and the resolved
+    config, this sets, for the fused path:
+
+    * ``grad_sync/num_buckets``            -- buckets in issue order
+    * ``grad_sync/total_nbytes``           -- bytes over all buckets
+    * ``grad_sync/bucketNN/nbytes``        -- per-bucket comm payload
+    * ``grad_sync/bucketNN/num_leaves``    -- leaves packed into bucket NN
+
+    The multidevice obs smoke cross-checks the gauge count against
+    ``hlo_stats.bucket_audit`` on the compiled step -- gauges describe the
+    *intended* schedule, the audit the *compiled* one; they must agree.
+    Returns the layout (issue order). No-ops (returns []) for the per-leaf
+    ``fuse=False`` path, where there is no bucketing to describe.
+    """
+    if registry is None or not cfg.fuse:
+        return []
+    layout = bucket_layout(grads_like, cfg)
+    registry.gauge("grad_sync/num_buckets").set(len(layout))
+    registry.gauge("grad_sync/total_nbytes").set(
+        sum(b["nbytes"] for b in layout))
+    for i, b in enumerate(layout):
+        registry.gauge(f"grad_sync/bucket{i:02d}/nbytes").set(b["nbytes"])
+        registry.gauge(
+            f"grad_sync/bucket{i:02d}/num_leaves").set(b["num_leaves"])
+    return layout
+
+
 # ---------------------------------------------------------------------------
 # Graceful degradation: strategy fallback chain (docs/robustness.md)
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core import lars as lars_lib
 from repro.core.topology import select_grid
 from repro.launch import hlo_stats
+from repro import obs
 from repro.testing.chaos import FaultPlan
 from repro.launch.mesh import (cache_pspecs, dp_axes_of, make_production_mesh,
                                param_pspecs, with_shardings)
@@ -95,7 +96,7 @@ def _vision_sds(cfg, batch, mesh, dp):
 
 def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
                 fuse=None, bucket_bytes=0, down_axes=()):
-    sync_info = {"effective": None, "events": []}
+    sync_info = {"effective": None, "events": [], "config": None}
     dp = dp_axes_of(mesh)
     fsdp = arch_id in FSDP_ARCHS
     params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
@@ -148,7 +149,10 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         # rather than abort the audit (docs/robustness.md).
         gcfg, sync_events = grad_sync_lib.resolve_sync_config(
             gcfg, grid, mesh, dp, down_axes=down_axes, probe=False)
-        sync_info = {"effective": gcfg.strategy, "events": sync_events}
+        sync_info = {"effective": gcfg.strategy, "events": sync_events,
+                     "config": {k: (v if isinstance(
+                         v, (int, float, bool, str, type(None))) else str(v))
+                         for k, v in dataclasses.asdict(gcfg).items()}}
 
         def step(params, mom, tokens, labels, vision):
             loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
@@ -220,7 +224,7 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     cfg = arch_for(arch_id, shape)
     down_axes = tuple(fault_plan.down_axes) if fault_plan is not None else ()
 
-    sync_info = {"effective": None, "events": []}
+    sync_info = {"effective": None, "events": [], "config": None}
     t0 = time.time()
     if shape.step == "train":
         if arch_id not in FSDP_ARCHS and \
@@ -254,8 +258,20 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
     coll = hlo_stats.collective_stats(hlo)
 
     n_chips = mesh.devices.size
+    # artifact provenance (docs/observability.md): a fresh run_id names
+    # this invocation; the fingerprint hashes the *resolved* distribution
+    # config (post-downgrade strategy included) so artifacts from
+    # different runs of the same config join on it.
+    mesh_summary = {a: int(mesh.shape[a]) for a in mesh.axis_names}
     result = {
         "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "run_id": obs.new_run_id(),
+        "config_fingerprint": obs.fingerprint({
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_summary,
+            "grad_sync": sync_info["config"],
+            "fsdp": arch_id in FSDP_ARCHS}),
+        "mesh_summary": mesh_summary,
+        "grad_sync_config": sync_info["config"],
         "step": shape.step, "chips": int(n_chips),
         "fsdp": arch_id in FSDP_ARCHS,
         "sync_strategy": sync_strategy if shape.step == "train" else None,
@@ -299,7 +315,8 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
 
 
 def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
-                max_steps: int = 8) -> dict:
+                max_steps: int = 8, metrics_out: str | None = None,
+                trace_out: str | None = None) -> dict:
     """Elastic-recovery smoke: run a real (tiny) training loop on the
     8-device mesh, kill torus axis "dy" permanently at ``fault_step``, and
     require the run to finish every planned step via a mid-run
@@ -307,6 +324,14 @@ def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
     "Elastic recovery"). Writes ``<out_dir>/chaos_train.json``; raises
     ``SystemExit`` if the run aborts or the recovery is not visible in the
     event stream -- the CI chaos-smoke job gates on exactly this.
+
+    ``fault_step < 0`` runs the same loop **fault-free** (no FaultPlan)
+    with inverted gates -- completion with zero recovery/downgrade events
+    and a zero ``elastic/recoveries`` counter -- and writes
+    ``train_smoke.json`` instead. ``metrics_out`` / ``trace_out`` route
+    the run's telemetry (metrics JSONL, Chrome trace) to files
+    (docs/observability.md); the recovery counters in the JSONL's summary
+    row are what CI cross-checks against the event-stream gates.
     """
     import shutil
     import tempfile
@@ -317,9 +342,12 @@ def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
     from repro.core.batch_control import build_plan
     from repro.data.synthetic import SyntheticImageNet
     from repro.models import resnet
+    from repro.obs import ObsConfig, Telemetry
     from repro.train.state import TrainState
     from repro.train.trainer import Trainer, TrainerConfig
 
+    faulty = fault_step >= 0
+    tag = "chaos-train" if faulty else "train-smoke"
     mesh = jax.make_mesh((2, 4), ("dy", "dx"))
     cfg = resnet.ResNetConfig.tiny(num_classes=4)
     data = SyntheticImageNet(num_classes=4, image_size=32, noise=0.3)
@@ -332,17 +360,24 @@ def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
 
     plan = build_plan(BatchSchedule((BatchStage(0, 1.0, 2),)),
                       dataset_size=256, n_workers=8, max_steps=max_steps)
+    obs_cfg = ObsConfig(metrics_path=metrics_out, trace_path=trace_out)
     tcfg = TrainerConfig(grad_sync=GradSyncConfig(strategy="torus2d"),
                          log_every=1, ckpt_every_steps=2, ckpt_keep_last=10,
-                         retry_backoff_s=1e-4)
-    fault_plan = FaultPlan(axis_down_events=(("dy", fault_step),))
+                         retry_backoff_s=1e-4, obs=obs_cfg)
+    fault_plan = (FaultPlan(axis_down_events=(("dy", fault_step),))
+                  if faulty else None)
     ckpt_dir = tempfile.mkdtemp(prefix="chaos_train_ckpt_")
     completed, error = False, None
     state = TrainState.create(resnet.init(jax.random.key(0), cfg))
+    # caller-owned telemetry: the registry snapshot must survive run() so
+    # the result can record the recovery counters next to the event gates
+    tel = Telemetry(obs_cfg, meta={
+        "source": tag, "fault_step": fault_step, "planned_steps": max_steps})
     trainer = Trainer(mesh=mesh, dp_axes=("dy", "dx"), loss_fn=loss_fn,
                       cfg=tcfg, plan=plan,
                       data_fn=lambda i, gb: data.batch(i, gb),
-                      checkpoint_dir=ckpt_dir, fault_plan=fault_plan)
+                      checkpoint_dir=ckpt_dir, fault_plan=fault_plan,
+                      telemetry=tel)
     t0 = time.time()
     try:
         state, history = trainer.run(state)
@@ -352,43 +387,75 @@ def chaos_train(fault_step: int, out_dir: str = "experiments/dryrun",
         history = []
         traceback.print_exc()
     finally:
+        tel.close()   # summary row + Chrome trace, even on abort
         shutil.rmtree(ckpt_dir, ignore_errors=True)
 
-    events = [h for h in history if "event" in h]
+    events = [h for h in history if h.get("kind") == "event"]
     downgrades = [e for e in events if e["event"] == "grad_sync_downgrade"]
     recoveries = [e for e in events if e["event"] == "elastic_recovery"]
     steps_done = int(state.step) if completed else 0
     losses_seen = [h["loss"] for h in history if "loss" in h]
+    snap = tel.registry.snapshot()
+
+    def counter_of(name):
+        return int(snap.get(name, {}).get("value", 0))
+
     result = {
-        "mode": "chaos_train", "mesh": "2x4", "chips": 8,
-        "fault": {"axis": "dy", "down_from_step": fault_step},
+        "mode": "chaos_train" if faulty else "train_smoke",
+        "mesh": "2x4", "chips": 8, "run_id": tel.run_id,
+        "fault": ({"axis": "dy", "down_from_step": fault_step}
+                  if faulty else None),
         "planned_steps": max_steps, "steps": steps_done,
         "completed": completed, "error": error,
         "wall_s": round(time.time() - t0, 1),
         "loss_finite": bool(np.all(np.isfinite(losses_seen))),
+        "metrics_out": metrics_out, "trace_out": trace_out,
+        "recovery_counters": {
+            "elastic/recoveries": counter_of("elastic/recoveries"),
+            "elastic/permanent_failures":
+                counter_of("elastic/permanent_failures"),
+            "events/elastic_recovery": counter_of("events/elastic_recovery"),
+        },
         "events": events,
     }
     os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, "chaos_train.json")
+    path = os.path.join(
+        out_dir, "chaos_train.json" if faulty else "train_smoke.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=1)
-    print(f"[chaos-train] wrote {path}")
+    print(f"[{tag}] wrote {path}")
 
     problems = []
     if not completed:
         problems.append(f"run aborted: {error}")
     elif steps_done != max_steps:
         problems.append(f"finished {steps_done}/{max_steps} steps")
-    if not any(d.get("context") == "elastic" for d in downgrades):
-        problems.append("no mid-run grad_sync_downgrade event")
-    if not recoveries:
-        problems.append("no elastic_recovery event")
+    if not result["loss_finite"]:
+        problems.append("non-finite loss in history")
+    if faulty:
+        if not any(d.get("context") == "elastic" for d in downgrades):
+            problems.append("no mid-run grad_sync_downgrade event")
+        if not recoveries:
+            problems.append("no elastic_recovery event")
+        if counter_of("elastic/recoveries") < 1:
+            problems.append("elastic/recoveries counter is zero")
+    else:
+        if downgrades or recoveries:
+            problems.append(
+                f"fault-free run saw {len(downgrades)} downgrade / "
+                f"{len(recoveries)} recovery events")
+        if counter_of("elastic/recoveries") != 0:
+            problems.append("fault-free run has nonzero elastic/recoveries")
     if problems:
-        raise SystemExit("[chaos-train] FAILED: " + "; ".join(problems))
-    print(f"[chaos-train] OK: axis dy died at step {fault_step}, run "
-          f"finished {steps_done}/{max_steps} steps "
-          f"(downgrade {downgrades[0]['from']}->{downgrades[0]['to']}, "
-          f"rollback to step {recoveries[0]['step']})")
+        raise SystemExit(f"[{tag}] FAILED: " + "; ".join(problems))
+    if faulty:
+        print(f"[{tag}] OK: axis dy died at step {fault_step}, run "
+              f"finished {steps_done}/{max_steps} steps "
+              f"(downgrade {downgrades[0]['from']}->{downgrades[0]['to']}, "
+              f"rollback to step {recoveries[0]['step']})")
+    else:
+        print(f"[{tag}] OK: fault-free run finished "
+              f"{steps_done}/{max_steps} steps, zero recovery events")
     return result
 
 
@@ -416,13 +483,22 @@ def main():
                          "permanently mid-run, and require completion via "
                          "mid-run downgrade + checkpoint rollback")
     ap.add_argument("--fault-step", type=int, default=3,
-                    help="step at which --chaos-train kills the axis")
+                    help="step at which --chaos-train kills the axis; "
+                         "negative runs the same loop fault-free "
+                         "(train_smoke.json, inverted gates)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="--chaos-train: write the run's metrics/event "
+                         "JSONL here (docs/observability.md)")
+    ap.add_argument("--trace-out", default=None,
+                    help="--chaos-train: write a Chrome trace_event JSON "
+                         "of the run's host spans here")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     if args.chaos_train:
-        chaos_train(args.fault_step, args.out)
+        chaos_train(args.fault_step, args.out,
+                    metrics_out=args.metrics_out, trace_out=args.trace_out)
         return
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

@@ -46,12 +46,14 @@ import os
 import queue as queue_lib
 import re
 import threading
+import time
 import zlib
 from typing import Callable
 
 import jax
 import numpy as np
 
+from repro.obs.metrics import NULL_REGISTRY
 from repro.train.state import TrainState
 from repro.utils.retry import retry_call
 
@@ -141,11 +143,13 @@ def _manifest_of(payload: dict[str, np.ndarray], step: int, name: str,
 
 def _commit(directory: str, path: str, payload: dict[str, np.ndarray],
             manifest: dict, *, retries: int, backoff_s: float,
-            keep_last: int, io_hook, on_retry) -> str:
+            keep_last: int, io_hook, on_retry,
+            metrics=NULL_REGISTRY) -> str:
     """The durable half of a save: atomic payload + manifest writes under
     the shared retry helper, then retention pruning. Runs on the caller
     thread for :func:`save`, on the worker thread for
-    :class:`AsyncCheckpointWriter`."""
+    :class:`AsyncCheckpointWriter`. ``metrics`` (repro.obs.metrics)
+    receives the commit-latency histogram and commit/failure counters."""
     os.makedirs(directory, exist_ok=True)
     attempt_box = [0]
 
@@ -160,14 +164,18 @@ def _commit(directory: str, path: str, payload: dict[str, np.ndarray],
                       lambda f: f.write(json.dumps(manifest).encode()),
                       io_hook, "manifest", a)
 
+    t0 = time.monotonic()
     try:
         retry_call(once, retries=retries, backoff_s=backoff_s,
                    retry_on=(OSError,), on_retry=on_retry,
                    seed=manifest["step"])
     except OSError as e:
+        metrics.counter("checkpoint/failures").inc()
         raise CheckpointError(
             f"checkpoint write failed after {retries + 1} attempts: "
             f"{e}") from e
+    metrics.histogram("checkpoint/commit_s").observe(time.monotonic() - t0)
+    metrics.counter("checkpoint/commits").inc()
     if keep_last > 0:
         _prune(directory, keep_last)
     return path
@@ -185,7 +193,8 @@ def _prepare(directory: str, state: TrainState, name: str | None,
 
 def save(directory: str, state: TrainState, name: str | None = None, *,
          retries: int = 3, backoff_s: float = 0.05, keep_last: int = 0,
-         meta: dict | None = None, io_hook=None, on_retry=None) -> str:
+         meta: dict | None = None, io_hook=None, on_retry=None,
+         metrics=NULL_REGISTRY) -> str:
     """Atomically write ``state`` and its manifest; returns the npz path.
 
     ``io_hook(phase, attempt)`` (phases ``begin``/``payload``/``manifest``)
@@ -193,11 +202,12 @@ def save(directory: str, state: TrainState, name: str | None = None, *,
     with jittered exponential backoff starting at ``backoff_s``, reporting
     each retried attempt to ``on_retry(attempt, exc)``. ``keep_last > 0``
     prunes to the newest K checkpoints by step after a successful write.
+    ``metrics`` records commit latency/outcome (repro.obs.metrics).
     """
     path, payload, manifest = _prepare(directory, state, name, meta)
     return _commit(directory, path, payload, manifest, retries=retries,
                    backoff_s=backoff_s, keep_last=keep_last,
-                   io_hook=io_hook, on_retry=on_retry)
+                   io_hook=io_hook, on_retry=on_retry, metrics=metrics)
 
 
 class AsyncCheckpointWriter:
@@ -221,12 +231,20 @@ class AsyncCheckpointWriter:
     ``flush`` blocks until every enqueued save is durable (the trainer's
     barrier before restore decisions and at run end); ``close`` flushes,
     stops the worker, and leaves the instance unusable.
+
+    ``metrics`` (repro.obs.metrics registry, shared with the trainer)
+    observes the writer from both threads: a ``checkpoint/queue_depth``
+    gauge tracks saves enqueued or in flight, and every commit lands in
+    the ``checkpoint/commit_s`` latency histogram plus commit/failure
+    counters -- the registry is lock-protected, so cross-thread recording
+    is safe.
     """
 
     def __init__(self, *, max_pending: int = 2, retries: int = 3,
-                 backoff_s: float = 0.05):
+                 backoff_s: float = 0.05, metrics=NULL_REGISTRY):
         self._retries = retries
         self._backoff_s = backoff_s
+        self._metrics = metrics
         self._queue: queue_lib.Queue = queue_lib.Queue(max(1, max_pending))
         self._events: collections.deque = collections.deque()
         self._lock = threading.Lock()
@@ -249,6 +267,7 @@ class AsyncCheckpointWriter:
         path, payload, manifest = _prepare(directory, state, name, meta)
         with self._lock:
             self._pending += 1
+            self._metrics.gauge("checkpoint/queue_depth").set(self._pending)
         self._queue.put((directory, path, payload, manifest, keep_last,
                          io_hook))
         return path
@@ -302,7 +321,8 @@ class AsyncCheckpointWriter:
                         keep_last=keep_last, io_hook=io_hook,
                         on_retry=lambda a, e: self._events.append(
                             {"event": "checkpoint_retry", "step": step,
-                             "attempt": a, "error": str(e)}))
+                             "attempt": a, "error": str(e)}),
+                        metrics=self._metrics)
                 self._events.append({"event": "checkpoint", "step": step,
                                      "path": os.path.basename(path)})
             except CheckpointError as e:
@@ -318,6 +338,8 @@ class AsyncCheckpointWriter:
             finally:
                 with self._idle:
                     self._pending -= 1
+                    self._metrics.gauge("checkpoint/queue_depth").set(
+                        self._pending)
                     self._idle.notify_all()
 
 

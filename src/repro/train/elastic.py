@@ -40,6 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs.metrics import NULL_REGISTRY
+
 
 @dataclasses.dataclass(frozen=True)
 class ElasticConfig:
@@ -84,15 +86,24 @@ class Supervisor:
     One instance supervises one ``Trainer.run`` call across all of its
     recovery attempts; streak counters reset on recovery (the rollback
     changed the world), the down-axis set and recovery count only grow.
+
+    ``metrics`` (repro.obs.metrics registry) mirrors the bookkeeping as
+    ``elastic/*`` counters and gauges (docs/observability.md) so a run's
+    health history survives in the metrics JSONL summary -- the CI chaos
+    smoke gates on ``elastic/recoveries`` being nonzero under injected
+    faults and zero fault-free.
     """
 
     def __init__(self, cfg: ElasticConfig,
-                 initial_down_axes: tuple[str, ...] = ()):
+                 initial_down_axes: tuple[str, ...] = (),
+                 metrics=NULL_REGISTRY):
         self.cfg = cfg
         self._down: set[str] = set(initial_down_axes)
         self.recoveries = 0
         self._nonfinite_streak = 0
         self._timeout_streak = 0
+        self._metrics = metrics
+        metrics.gauge("elastic/down_axes").set(len(self._down))
 
     @property
     def down_axes(self) -> tuple[str, ...]:
@@ -125,6 +136,7 @@ class Supervisor:
             return None
         new = set(probe(step)) - self._down
         if new:
+            self._metrics.counter("elastic/permanent_failures").inc()
             return PermanentFailure(
                 "axis_down", step, down_axes=tuple(sorted(new)),
                 detail="health probe reports torus axis(es) dead")
@@ -139,16 +151,22 @@ class Supervisor:
         if not self.cfg.enabled:
             return None
         self._nonfinite_streak = self._nonfinite_streak + 1 if skipped else 0
+        if skipped:
+            self._metrics.counter("elastic/skipped_steps").inc()
         if self.cfg.step_timeout_s is not None and elapsed_s is not None \
                 and elapsed_s > self.cfg.step_timeout_s:
             timed_out = True
         self._timeout_streak = self._timeout_streak + 1 if timed_out else 0
+        if timed_out:
+            self._metrics.counter("elastic/timeout_steps").inc()
         if self._nonfinite_streak >= self.cfg.max_consecutive_nonfinite:
+            self._metrics.counter("elastic/permanent_failures").inc()
             return PermanentFailure(
                 "nonfinite_streak", step,
                 detail=f"{self._nonfinite_streak} consecutive guard-skipped "
                        "steps; loss-scale backoff cannot recover this")
         if self._timeout_streak >= self.cfg.max_consecutive_timeouts:
+            self._metrics.counter("elastic/permanent_failures").inc()
             return PermanentFailure(
                 "timeout", step,
                 detail=f"{self._timeout_streak} consecutive step timeouts")
@@ -163,4 +181,6 @@ class Supervisor:
         self._nonfinite_streak = 0
         self._timeout_streak = 0
         self.recoveries += 1
+        self._metrics.counter("elastic/recoveries").inc()
+        self._metrics.gauge("elastic/down_axes").set(len(self._down))
         return self.recoveries

@@ -61,6 +61,9 @@ from repro.core import schedules as sched_lib
 from repro.core.batch_control import TrainPlan, epoch_of
 from repro.core.grad_sync import GradSyncConfig, sync_tree
 from repro.core.topology import TorusGrid, select_grid
+from repro.obs import ObsConfig, Telemetry
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.tracing import jax_profile
 from repro.testing.chaos import RETRYABLE
 from repro.train import checkpoint
 from repro.train.elastic import ElasticConfig, PermanentFailure, Supervisor
@@ -107,6 +110,9 @@ class TrainerConfig:
     data_retries: int = 3
     retry_backoff_s: float = 0.05       # base of the exponential backoff
     elastic: ElasticConfig = ElasticConfig()  # mid-run recovery supervisor
+    # observability (docs/observability.md): metrics JSONL / Chrome trace /
+    # jax profiler paths; registry + tracer always run (near-zero cost)
+    obs: ObsConfig = ObsConfig()
 
 
 def make_train_step(loss_fn: Callable, mesh, dp_axes: tuple[str, ...],
@@ -213,6 +219,8 @@ class Trainer:
     data_fn: Callable                  # (step_index, global_batch) -> batch
     checkpoint_dir: str | None = None
     fault_plan: Any | None = None      # repro.testing.chaos.FaultPlan
+    telemetry: Any | None = None       # repro.obs.Telemetry; None: built
+                                       # from cfg.obs and closed by run()
 
     def run(self, state: TrainState, max_steps: int | None = None,
             log: Callable = print, resume: bool = False):
@@ -221,11 +229,16 @@ class Trainer:
 
         ``history`` holds per-step metric rows (every ``log_every`` steps,
         at stage ends, and on every skipped step) interleaved with event
-        rows (``{"event": ...}``: grad-sync downgrades, data retries,
-        checkpoint saves/recoveries, resume, ``elastic_failure`` /
-        ``elastic_recovery``). ``resume=True`` restores the newest *valid*
-        checkpoint from ``checkpoint_dir`` and fast-forwards the plan to
-        the exact mid-stage step.
+        rows (grad-sync downgrades, data retries, checkpoint
+        saves/recoveries, resume, ``elastic_failure`` /
+        ``elastic_recovery``). Every row carries a ``"kind"`` marker --
+        ``"metric"`` or ``"event"`` -- so a serialized history round-trips
+        through JSONL unambiguously; rows are mirrored to the run's
+        telemetry sink (``cfg.obs.metrics_path``) with per-step phase
+        breakdowns and a final metrics summary (docs/observability.md).
+        ``resume=True`` restores the newest *valid* checkpoint from
+        ``checkpoint_dir`` and fast-forwards the plan to the exact
+        mid-stage step.
 
         On a :class:`~repro.train.elastic.PermanentFailure` the loop
         re-resolves the sync strategy against the accumulated down axes,
@@ -234,13 +247,22 @@ class Trainer:
         replayed span appear twice in ``history`` (pre- and post-rollback).
         """
         history: list[dict] = []
+        cfg = self.cfg
+        tel = self.telemetry
+        own_tel = tel is None
+        if own_tel:
+            # one telemetry bundle per run; closed (summary row + trace
+            # export) in the finally below. A caller-supplied telemetry is
+            # left open -- the caller owns its lifecycle and run_id.
+            tel = Telemetry(cfg.obs, meta={
+                "source": "trainer", "schedule": cfg.schedule,
+                "strategy": cfg.grad_sync.strategy,
+                "bucket_bytes": cfg.grad_sync.bucket_bytes})
 
         def event(etype: str, **kw):
-            rec = {"event": etype, **kw}
-            history.append(rec)
+            history.append(tel.event(etype, **kw))
             log(f"[{etype}] " + " ".join(f"{k}={v}" for k, v in kw.items()))
 
-        cfg = self.cfg
         grid = select_grid(self.dp_axes)
         if self.fault_plan is None:
             initial_down: tuple[str, ...] = ()
@@ -249,13 +271,14 @@ class Trainer:
         else:
             initial_down = tuple(getattr(self.fault_plan, "down_axes", ())
                                  or ())
-        supervisor = Supervisor(cfg.elastic, initial_down_axes=initial_down)
+        supervisor = Supervisor(cfg.elastic, initial_down_axes=initial_down,
+                                metrics=tel.registry)
 
         writer = None
         if self.checkpoint_dir and cfg.ckpt_async:
             writer = checkpoint.AsyncCheckpointWriter(
                 max_pending=cfg.ckpt_max_pending, retries=cfg.ckpt_retries,
-                backoff_s=cfg.retry_backoff_s)
+                backoff_s=cfg.retry_backoff_s, metrics=tel.registry)
 
         data_fn = (self.fault_plan.wrap_data_fn(self.data_fn)
                    if self.fault_plan is not None else self.data_fn)
@@ -279,47 +302,69 @@ class Trainer:
             # (buffer-donating) step consumes the initial state
             if (cfg.elastic.enabled and self.checkpoint_dir
                     and checkpoint.latest(self.checkpoint_dir) is None):
-                self._save_checkpoint(state, None, event, writer)
+                self._save_checkpoint(state, None, event, writer,
+                                      metrics=tel.registry)
 
-            # -- supervised recovery loop (docs/robustness.md) ------------
-            while True:
-                context = ("startup" if supervisor.recoveries == 0
-                           else "elastic")
-                sync_cfg, sync_events = grad_sync_lib.resolve_sync_config(
-                    cfg.grad_sync, grid, self.mesh, self.dp_axes,
-                    down_axes=supervisor.down_axes, context=context)
-                for ev in sync_events:
-                    ev = dict(ev)
-                    event(ev.pop("event"), **ev)
-                run_cfg = dataclasses.replace(cfg, grad_sync=sync_cfg)
-                # ONE step fn for every stage of this attempt: jit
-                # re-specializes per batch shape. (A per-global-batch cache
-                # here would store identical fns -- the builder never sees
-                # the batch size -- while hiding the per-stage recompile
-                # behind a dict hit.)
-                fn = make_train_step(self.loss_fn, self.mesh, self.dp_axes,
-                                     run_cfg, grid=grid)
-                try:
-                    state = self._run_steps(
-                        fn, state, run_cfg, data_fn, start_step, max_steps,
-                        supervisor, writer, history, event, log)
-                    return state, history
-                except PermanentFailure as failure:
-                    state, start_step = self._recover(
-                        state, failure, supervisor, writer, event)
+            # -- supervised recovery loop (docs/robustness.md); optionally
+            # under jax.profiler.trace so the device timeline (per-bucket
+            # all-reduces overlapping backward) is captured alongside the
+            # host spans (docs/observability.md)
+            with jax_profile(cfg.obs.jax_profile_dir
+                             if cfg.obs.enabled else None):
+                while True:
+                    context = ("startup" if supervisor.recoveries == 0
+                               else "elastic")
+                    sync_cfg, sync_events = \
+                        grad_sync_lib.resolve_sync_config(
+                            cfg.grad_sync, grid, self.mesh, self.dp_axes,
+                            down_axes=supervisor.down_axes, context=context)
+                    for ev in sync_events:
+                        ev = dict(ev)
+                        event(ev.pop("event"), **ev)
+                    run_cfg = dataclasses.replace(cfg, grad_sync=sync_cfg)
+                    # the bucket schedule is a host-side function of the
+                    # param structure + resolved config: publish it as
+                    # per-bucket gauges (re-published after a downgrade)
+                    grad_sync_lib.record_bucket_metrics(
+                        state.params, run_cfg.grad_sync, tel.registry)
+                    # ONE step fn for every stage of this attempt: jit
+                    # re-specializes per batch shape. (A per-global-batch
+                    # cache here would store identical fns -- the builder
+                    # never sees the batch size -- while hiding the
+                    # per-stage recompile behind a dict hit.)
+                    fn = make_train_step(self.loss_fn, self.mesh,
+                                         self.dp_axes, run_cfg, grid=grid)
+                    try:
+                        state = self._run_steps(
+                            fn, state, run_cfg, data_fn, start_step,
+                            max_steps, supervisor, writer, history, event,
+                            log, tel)
+                        return state, history
+                    except PermanentFailure as failure:
+                        state, start_step = self._recover(
+                            state, failure, supervisor, writer, event)
         finally:
             if writer is not None:
                 writer.close()
                 self._drain(writer, event)
+            if own_tel:
+                tel.close()
 
     # -- the per-attempt step loop ----------------------------------------
 
     def _run_steps(self, fn, state: TrainState, cfg: TrainerConfig, data_fn,
                    start_step: int, max_steps: int | None,
                    supervisor: Supervisor, writer, history: list, event,
-                   log) -> TrainState:
+                   log, tel) -> TrainState:
         """One supervised attempt over the plan; raises
-        :class:`PermanentFailure` when the supervisor flags one."""
+        :class:`PermanentFailure` when the supervisor flags one.
+
+        Each step runs inside a ``step`` span with ``data`` / ``dispatch`` /
+        ``sync_wait`` / ``log`` / ``checkpoint`` children covering its full
+        body, so the phase durations account for (nearly all of) the step's
+        wall time -- docs/observability.md asserts the sum lands within 10%.
+        """
+        reg = tel.registry
         for stage in self.plan.stages:
             gb = stage.global_batch
             if start_step >= stage.first_step + stage.num_steps:
@@ -336,54 +381,98 @@ class Trainer:
                 if failure is not None:
                     raise failure
                 epoch = epoch_of(self.plan, stage, i)
-                batch = self._fetch_batch(data_fn, gstep, gb, event)
-                if self.fault_plan is not None:
-                    batch = self.fault_plan.corrupt_batch(gstep, batch)
-                t0 = time.monotonic()
-                state, metrics = fn(state, batch,
-                                    jnp.asarray(epoch, jnp.float32),
-                                    jnp.asarray(gb, jnp.float32))
-                done = gstep + 1
-                # reading the flag forces a host sync; without the guard
-                # there is nothing to read and dispatch stays async (then
-                # elapsed_s covers dispatch only -- wall-clock timeout
-                # detection needs the guard's sync or injected signals)
-                skipped = int(metrics["skipped"]) if cfg.guard.enabled else 0
-                elapsed = time.monotonic() - t0
-                timed_out = (self.fault_plan is not None
-                             and hasattr(self.fault_plan, "step_timed_out")
-                             and self.fault_plan.step_timed_out(gstep))
-                if (done % cfg.log_every == 0 or i == stage.num_steps - 1
-                        or skipped):
-                    m = {k: float(v) for k, v in metrics.items()}
-                    m.update(step=done, epoch=epoch, global_batch=gb,
-                             skipped=skipped,
-                             nonfinite_count=int(metrics["nonfinite_count"]))
-                    history.append(m)
-                    log(f"step {done:5d} epoch {epoch:6.2f} gb {gb:6d} "
-                        f"loss {m['loss']:.4f} lr {m['lr']:.3f} "
-                        f"mom {m['momentum']:.3f}"
-                        + (f" SKIPPED (nonfinite={m['nonfinite_count']}, "
-                           f"scale->{m['loss_scale']:g})" if skipped else ""))
-                # detection strictly precedes the periodic save: a failure
-                # here must not first persist a checkpoint whose step
-                # counter has advanced past the streak's skipped updates
-                failure = supervisor.observe_step(
-                    gstep, skipped=bool(skipped), timed_out=timed_out,
-                    elapsed_s=elapsed)
-                if failure is not None:
-                    raise failure
-                if (self.checkpoint_dir and cfg.ckpt_every_steps
-                        and done % cfg.ckpt_every_steps == 0
-                        and supervisor.healthy):
-                    self._save_checkpoint(state, stage, event, writer)
-                if writer is not None:
-                    self._drain(writer, event)
+                with tel.span("step", step=gstep) as sp_step:
+                    with tel.span("data", step=gstep) as sp_data:
+                        batch = self._fetch_batch(data_fn, gstep, gb, event)
+                        if self.fault_plan is not None:
+                            batch = self.fault_plan.corrupt_batch(gstep,
+                                                                  batch)
+                    t0 = time.monotonic()
+                    with tel.span("dispatch", step=gstep) as sp_disp:
+                        state, metrics = fn(state, batch,
+                                            jnp.asarray(epoch, jnp.float32),
+                                            jnp.asarray(gb, jnp.float32))
+                    done = gstep + 1
+                    # reading the flag forces a host sync; without the guard
+                    # there is nothing to read and dispatch stays async
+                    # (then elapsed_s covers dispatch only -- wall-clock
+                    # timeout detection needs the guard's sync or injected
+                    # signals)
+                    with tel.span("sync_wait", step=gstep) as sp_sync:
+                        skipped = (int(metrics["skipped"])
+                                   if cfg.guard.enabled else 0)
+                    elapsed = time.monotonic() - t0
+                    timed_out = (
+                        self.fault_plan is not None
+                        and hasattr(self.fault_plan, "step_timed_out")
+                        and self.fault_plan.step_timed_out(gstep))
+                    with tel.span("log", step=gstep) as sp_log:
+                        if (done % cfg.log_every == 0
+                                or i == stage.num_steps - 1 or skipped):
+                            m = {k: float(v) for k, v in metrics.items()}
+                            m.update(
+                                step=done, epoch=epoch, global_batch=gb,
+                                skipped=skipped,
+                                nonfinite_count=int(
+                                    metrics["nonfinite_count"]),
+                                kind="metric")
+                            history.append(m)
+                            tel.emit(m)
+                            log(f"step {done:5d} epoch {epoch:6.2f} "
+                                f"gb {gb:6d} loss {m['loss']:.4f} "
+                                f"lr {m['lr']:.3f} mom {m['momentum']:.3f}"
+                                + (f" SKIPPED "
+                                   f"(nonfinite={m['nonfinite_count']}, "
+                                   f"scale->{m['loss_scale']:g})"
+                                   if skipped else ""))
+                    # detection strictly precedes the periodic save: a
+                    # failure here must not first persist a checkpoint whose
+                    # step counter has advanced past the streak's skipped
+                    # updates
+                    failure = supervisor.observe_step(
+                        gstep, skipped=bool(skipped), timed_out=timed_out,
+                        elapsed_s=elapsed)
+                    if failure is not None:
+                        raise failure
+                    with tel.span("checkpoint", step=gstep) as sp_ckpt:
+                        if (self.checkpoint_dir and cfg.ckpt_every_steps
+                                and done % cfg.ckpt_every_steps == 0
+                                and supervisor.healthy):
+                            self._save_checkpoint(state, stage, event,
+                                                  writer,
+                                                  metrics=tel.registry)
+                        if writer is not None:
+                            self._drain(writer, event)
+                # host-side step accounting (outside the step span so the
+                # recording cost is not inside what it measures)
+                reg.histogram("step/wall_s").observe(sp_step.duration)
+                reg.histogram("step/data_s").observe(sp_data.duration)
+                reg.histogram("step/sync_wait_s").observe(sp_sync.duration)
+                reg.counter("train/steps").inc()
+                if cfg.guard.enabled:
+                    if skipped:
+                        reg.counter("train/skipped_steps").inc()
+                        reg.counter("train/nonfinite_total").inc(
+                            int(metrics["nonfinite_count"]))
+                    reg.gauge("train/loss_scale").set(
+                        float(metrics["loss_scale"]))
+                if (tel.sink is not None
+                        and done % max(1, cfg.obs.step_metrics_every) == 0):
+                    tel.emit({
+                        "kind": "metric", "metric": "step_phases",
+                        "step": done, "wall_s": sp_step.duration,
+                        "phases": {"data": sp_data.duration,
+                                   "dispatch": sp_disp.duration,
+                                   "sync_wait": sp_sync.duration,
+                                   "log": sp_log.duration,
+                                   "checkpoint": sp_ckpt.duration}})
             # stage-boundary save, unless the periodic save just covered it
             if self.checkpoint_dir and not (
                     cfg.ckpt_every_steps
                     and int(state.step) % cfg.ckpt_every_steps == 0):
-                self._save_checkpoint(state, stage, event, writer)
+                with tel.span("checkpoint", step=int(state.step)):
+                    self._save_checkpoint(state, stage, event, writer,
+                                          metrics=tel.registry)
         return state
 
     # -- recovery paths ---------------------------------------------------
@@ -449,11 +538,12 @@ class Trainer:
                 f"{self.cfg.data_retries + 1} attempts") from e
 
     def _save_checkpoint(self, state: TrainState, stage, event,
-                         writer=None) -> None:
+                         writer=None, metrics=NULL_REGISTRY) -> None:
         """Crash-consistent save; a checkpoint failure is an event, not a
         training abort (the run continues from the previous checkpoint).
-        With ``writer`` the commit runs off-thread and its outcome events
-        arrive via :meth:`_drain`."""
+        With ``writer`` the commit runs off-thread (its own ``metrics``
+        registry, given at construction) and its outcome events arrive via
+        :meth:`_drain`."""
         hook = (self.fault_plan.checkpoint_io_hook
                 if self.fault_plan is not None else None)
         meta = ({"stage_end_epoch": stage.stage.end_epoch,
@@ -474,7 +564,7 @@ class Trainer:
                 retries=self.cfg.ckpt_retries,
                 backoff_s=self.cfg.retry_backoff_s,
                 keep_last=self.cfg.ckpt_keep_last,
-                meta=meta, io_hook=hook,
+                meta=meta, io_hook=hook, metrics=metrics,
                 on_retry=lambda attempt, e: event(
                     "checkpoint_retry", step=int(state.step),
                     attempt=attempt, error=str(e)))
