@@ -40,7 +40,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import collectives
+from repro.core import autotune, collectives
 from repro.core.grad_sync import GradSyncConfig, bucket_layout, sync_tree
 from repro.core.topology import TorusGrid, paper_table4_grid
 from repro.launch import hlo_stats
@@ -177,6 +177,30 @@ def bucket_sweep(bucket_bytes_list=DEFAULT_SWEEP, strategy: str = "torus2d",
                         f"{model['exposed_seconds'] * 1e6:.0f},tpu_win_us="
                         f"{model['overlap_win_seconds'] * 1e6:.0f}"),
         })
+
+    # the autotuner's pick at the TPU target, over the union of the swept
+    # sizes and its own grid -- the row the sweep is ultimately *for*
+    hw = autotune.HardwareModel(link_bw=TPU_LINK_BW, latency_s=TPU_LATENCY,
+                                backward_seconds=BACKWARD_SECONDS,
+                                name="tpu-16x16")
+    total = RESNET50_GRAD_BYTES / 2
+    knee = autotune.analytic_knee_bytes(strategy, TPU_X, TPU_Y, hw)
+    union = sorted(set(int(b) for b in bucket_bytes_list)
+                   | set(autotune.candidate_bucket_bytes(knee, int(total))))
+    rec = autotune.recommend_bucket_bytes(strategy, TPU_X, TPU_Y, hw,
+                                          total_bytes=total,
+                                          candidates=union)
+    bracket = autotune.sweep_bracket(
+        [{"bucket_bytes": r["bucket_bytes"],
+          "exposed_seconds": r["exposed_seconds"]}
+         for r in rec["candidates"]])
+    rows.append({
+        "name": f"bucket_autotune_{strategy}",
+        "us_per_call": round(rec["exposed_seconds"] * 1e6, 1),
+        "derived": (f"pick={rec['bucket_bytes']},buckets="
+                    f"{rec['num_buckets']},knee={knee},within_bracket="
+                    f"{autotune.pick_within_bracket(rec['bucket_bytes'], bracket)}"),
+    })
     return rows
 
 

@@ -34,8 +34,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.configs import comm as comm_cfg
 from repro.configs import registry
 from repro.configs.shapes import SHAPES, ShapeConfig, long_context_variant
+from repro.core import autotune, collectives
 from repro.core import grad_sync as grad_sync_lib
 from repro.core import losses
 from repro.core.grad_sync import GradSyncConfig, sync_tree
@@ -59,6 +61,11 @@ FSDP_ARCHS = {"llama-3.2-vision-90b", "kimi-k2-1t-a32b", "llama3-405b",
 # torus-link faults) is handled by the shared fallback chain in
 # repro.core.grad_sync.resolve_sync_config; build_train records the
 # resolved strategy + downgrade events and run_one writes them to the JSON.
+
+
+def _bucket_bytes_arg(s: str):
+    """--bucket-bytes parser: an int, or the literal "auto" sentinel."""
+    return s if s == grad_sync_lib.AUTO else int(s)
 
 
 def sds(shape, dtype, mesh=None, spec=None):
@@ -136,8 +143,9 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         comm_dtype = (jnp.bfloat16 if jax.default_backend() == "tpu"
                       else jnp.float32)
         grid = select_grid(dp)
-        # bucket_bytes only changes the schedule on the fused (pure-DP)
-        # path; per-leaf sync is already one exchange per leaf.
+        # bucket_bytes shapes both paths: fused comm buckets (pure DP) and
+        # the grouped small-leaf psums of the per-leaf (TP) path. "auto"
+        # is resolved below against this mesh's fabric constants.
         gcfg = GradSyncConfig(strategy=sync_strategy,
                               fuse=False if fuse is None else fuse,
                               comm_dtype=comm_dtype,
@@ -148,11 +156,16 @@ def build_train(arch_id, cfg, shape, mesh, sync_strategy="torus2d",
         # decompositions -- downgrade along the chain and record it
         # rather than abort the audit (docs/robustness.md).
         gcfg, sync_events = grad_sync_lib.resolve_sync_config(
-            gcfg, grid, mesh, dp, down_axes=down_axes, probe=False)
+            gcfg, grid, mesh, dp, down_axes=down_axes, probe=False,
+            params_like=params_sds, hw=comm_cfg.hw_for_mesh(mesh))
+        layout = grad_sync_lib.bucket_layout(params_sds, gcfg)
         sync_info = {"effective": gcfg.strategy, "events": sync_events,
                      "config": {k: (v if isinstance(
                          v, (int, float, bool, str, type(None))) else str(v))
-                         for k, v in dataclasses.asdict(gcfg).items()}}
+                         for k, v in dataclasses.asdict(gcfg).items()},
+                     "expected_exchanges": len(layout),
+                     "min_exchange_bytes": (min(b["nbytes"] for b in layout)
+                                            if layout else None)}
 
         def step(params, mom, tokens, labels, vision):
             loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels,
@@ -210,13 +223,36 @@ def build_decode(arch_id, cfg, shape, mesh):
     return jax.jit(fn), (params_sds, token, cache_sds, index)
 
 
+def _audit_floor(sync_info: dict) -> int:
+    """min_bytes floor for the HLO bucket audit, derived from the resolved
+    schedule instead of a hardcoded constant: low enough to keep the
+    smallest intended exchange (a sub-KiB fp32 group of a small model
+    would otherwise vanish from the audit), high enough (>= 16 B) to drop
+    scalar loss/metric psums. FSDP runs have no manual schedule and keep
+    the historical 1 KiB floor."""
+    smallest = sync_info.get("min_exchange_bytes")
+    if smallest is None:
+        return 1024
+    return max(16, min(1024, int(smallest)))
+
+
+def _audit_summary(hlo: str, sync_info: dict) -> dict:
+    audit = hlo_stats.bucket_audit(hlo, min_bytes=_audit_floor(sync_info))
+    return {"num_exchanges": audit["num_exchanges"],
+            "min_bytes": audit["dropped"]["min_bytes"],
+            "by_kind": audit["by_kind"],
+            "dropped": {k: audit["dropped"][k]
+                        for k in ("count", "bytes", "by_kind")}}
+
+
 # ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool,
             sync_strategy: str = "torus2d", out_dir: str = "experiments/dryrun",
-            save: bool = True, quiet: bool = False, bucket_bytes: int = 0,
+            save: bool = True, quiet: bool = False,
+            bucket_bytes: int | str = 0,
             fault_plan: FaultPlan | None = None) -> dict:
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -280,7 +316,10 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
         "fault_injection": ({"down_axes": list(down_axes)}
                             if down_axes else None),
         "bucket_bytes": bucket_bytes if shape.step == "train" else None,
-        "bucket_audit": (hlo_stats.bucket_audit(hlo, min_bytes=1024)["by_kind"]
+        "bucket_bytes_resolved": ((sync_info["config"] or {}).get(
+            "bucket_bytes") if shape.step == "train" else None),
+        "expected_exchanges": sync_info.get("expected_exchanges"),
+        "bucket_audit": (_audit_summary(hlo, sync_info)
                          if shape.step == "train" else None),
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
@@ -311,6 +350,172 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
               f"flops {cost.get('flops', 0):.3e} "
               f"coll {coll['total_bytes'] / 2**30:.2f}GiB "
               f"temp/chip {mb:.2f}GiB")
+    return result
+
+
+def sweep_bucket_bytes(arch_id: str, multi_pod: bool = False,
+                       sync_strategy: str = "torus2d",
+                       out_dir: str = "experiments/dryrun",
+                       save: bool = True, smoke_arch: bool = False,
+                       candidates: list[int] | None = None,
+                       max_hlo_buckets: int = 256,
+                       slack: float = 0.05) -> dict:
+    """Empirical bucket-size sweep: compile the *sync-only* program (fused
+    bucketed ``sync_tree`` under a fully-manual shard_map -- the
+    partial-manual train step aborts on this jaxlib, see repro/compat.py)
+    at production scale for each candidate ``bucket_bytes``, audit the
+    compiled HLO's independent exchanges, and pair every row with the
+    alpha-beta cost model. The autotuner's pick
+    (``autotune.recommend_bucket_bytes`` over the union of the sweep's
+    candidates) is then gated against the sweep:
+
+    * its cost-model ``exposed_seconds`` is within 10% of the sweep's best,
+    * it strictly beats both ``bucket_bytes=0`` (fused) and the legacy
+      hand-set 4 MiB constant,
+    * it lands inside the sweep's measured-optimum bracket.
+
+    Writes ``bucket_sweep__<arch>__<mesh>.json``; raises ``SystemExit``
+    when a gate fails -- the CI ``bucket-sweep`` job runs exactly this on
+    the smoke config. Candidates whose schedule exceeds ``max_hlo_buckets``
+    skip compilation (cost-model row only, with the skip recorded): a
+    full-size arch near the knee can need thousands of buckets, which the
+    sweep reports rather than silently compiles for an hour.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = (registry.get_smoke(arch_id) if smoke_arch
+           else registry.get(arch_id))
+    dp = dp_axes_of(mesh)
+    grid = select_grid(dp)
+    x, y = grid.sizes(mesh)
+    comm_dtype = (jnp.bfloat16 if jax.default_backend() == "tpu"
+                  else jnp.float32)
+    hw = comm_cfg.hw_for_mesh(mesh)
+
+    # fully-manual over ALL mesh axes (model axis included) -> grads must
+    # be replicated; the fused pure-DP path is exactly that regime.
+    gcfg0 = GradSyncConfig(strategy=sync_strategy, fuse=True,
+                           comm_dtype=comm_dtype, bucket_bytes=0)
+    gcfg0, resolve_events = grad_sync_lib.resolve_sync_config(
+        gcfg0, grid, mesh, mesh.axis_names, probe=False)
+    strategy = gcfg0.strategy
+
+    params_sds = jax.eval_shape(lambda: T.init(jax.random.key(0), cfg))
+    params_sds = jax.tree.map(
+        lambda s: sds(s.shape, s.dtype, mesh, P()), params_sds)
+    layout0 = grad_sync_lib.bucket_layout(params_sds, gcfg0)
+    total_bytes = sum(b["nbytes"] for b in layout0)
+    knee = autotune.analytic_knee_bytes(strategy, x, y, hw)
+    default_grid = autotune.candidate_bucket_bytes(knee, total_bytes)
+    cand = sorted(set(candidates)) if candidates else default_grid
+
+    rows = []
+    for b in cand:
+        gcfg = dataclasses.replace(gcfg0, bucket_bytes=b)
+        layout = grad_sync_lib.bucket_layout(params_sds, gcfg)
+        floor = max(16, min(1024, min(e["nbytes"] for e in layout)))
+        m = collectives.bucketed_comm_cost_model(
+            strategy, total_bytes, b, x, y, hw.link_bw, hw.latency_s,
+            backward_seconds=hw.backward_seconds)
+        row = {"bucket_bytes": b, "num_buckets": len(layout),
+               "exposed_seconds": m["exposed_seconds"],
+               "serial_seconds": m["serial_seconds"]}
+        if len(layout) <= max_hlo_buckets:
+            t0 = time.time()
+
+            def sync_only(grads, _gcfg=gcfg):
+                return sync_tree(grads, grid, _gcfg)
+
+            smapped = compat.shard_map(
+                sync_only, mesh=mesh, in_specs=P(), out_specs=P(),
+                axis_names=frozenset(mesh.axis_names), check_vma=False)
+            hlo = jax.jit(smapped).lower(params_sds).compile().as_text()
+            audit = hlo_stats.bucket_audit(hlo, min_bytes=floor)
+            row.update({
+                "num_exchanges": audit["num_exchanges"],
+                "audit_by_kind": audit["by_kind"],
+                "audit_dropped": {k: audit["dropped"][k]
+                                  for k in ("count", "bytes", "min_bytes")},
+                "hlo_matches_schedule":
+                    audit["num_exchanges"] == len(layout),
+                "compile_s": round(time.time() - t0, 1),
+            })
+        else:
+            row["hlo_skipped"] = (f"{len(layout)} buckets > "
+                                  f"max_hlo_buckets={max_hlo_buckets}; "
+                                  "cost-model row only")
+        rows.append(row)
+        print(f"[sweep] bucket_bytes={b:>12d}  buckets={len(layout):>5d}  "
+              f"exposed={m['exposed_seconds'] * 1e6:9.1f}us  "
+              f"hlo_exchanges={row.get('num_exchanges', '-')}")
+
+    # the "auto" pick, evaluated over the union of the sweep's candidates
+    # and the default grid -- same rule resolve_sync_config applies, so
+    # the <=10%-of-best gate holds whenever the model is self-consistent
+    union = sorted(set(cand) | set(default_grid))
+    rec = autotune.recommend_bucket_bytes(strategy, x, y, hw,
+                                          total_bytes=total_bytes,
+                                          candidates=union, slack=slack)
+    refined = autotune.refine_from_sweep(rows, strategy, x, y, hw,
+                                         total_bytes=total_bytes,
+                                         slack=slack)
+
+    def exposed_at(b):
+        return collectives.bucketed_comm_cost_model(
+            strategy, total_bytes, b, x, y, hw.link_bw, hw.latency_s,
+            backward_seconds=hw.backward_seconds)["exposed_seconds"]
+
+    best_row = min(rows, key=lambda r: r["exposed_seconds"])
+    checks = {
+        "auto_within_10pct_of_sweep_best":
+            rec["exposed_seconds"] <= 1.10 * best_row["exposed_seconds"],
+        "auto_beats_fused":
+            rec["exposed_seconds"] < exposed_at(0),
+        "auto_beats_legacy_4mib":
+            rec["exposed_seconds"]
+            < exposed_at(autotune.LEGACY_DEFAULT_BUCKET_BYTES),
+        "auto_within_sweep_bracket":
+            autotune.pick_within_bracket(rec["bucket_bytes"],
+                                         refined["bracket"]),
+    }
+    result = {
+        "mode": "bucket_sweep", "arch": arch_id,
+        "arch_variant": "smoke" if smoke_arch else "full",
+        "mesh": mesh_name, "chips": int(mesh.devices.size),
+        "strategy_requested": sync_strategy, "strategy": strategy,
+        "resolve_events": resolve_events or None,
+        "comm_dtype": str(jnp.dtype(comm_dtype)),
+        "total_bytes": total_bytes,
+        "hw": dataclasses.asdict(hw),
+        "analytic_knee_bytes": knee,
+        "rows": rows,
+        "auto": {"bucket_bytes": rec["bucket_bytes"],
+                 "num_buckets": rec["num_buckets"],
+                 "exposed_seconds": rec["exposed_seconds"]},
+        "refined": refined,
+        "checks": checks,
+    }
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"bucket_sweep__{arch_id}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"[sweep] wrote {path}")
+    failed = [k for k, ok in checks.items() if not ok]
+    if failed:
+        raise SystemExit(
+            f"[sweep] FAILED gates: {failed}; auto pick "
+            f"{rec['bucket_bytes']} (exposed "
+            f"{rec['exposed_seconds'] * 1e6:.1f}us) vs sweep best "
+            f"{best_row['bucket_bytes']} "
+            f"({best_row['exposed_seconds'] * 1e6:.1f}us)")
+    print(f"[sweep] OK: auto bucket_bytes={rec['bucket_bytes']} "
+          f"({rec['num_buckets']} buckets, "
+          f"exposed {rec['exposed_seconds'] * 1e6:.1f}us) within "
+          f"bracket [{refined['bracket']['low']}, "
+          f"{refined['bracket']['high']}] of sweep best "
+          f"{refined['bracket']['best_bucket_bytes']}")
     return result
 
 
@@ -468,9 +673,21 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--sync", default="torus2d",
                     choices=["psum", "ring", "hierarchical", "torus2d"])
-    ap.add_argument("--bucket-bytes", type=int, default=0,
+    ap.add_argument("--bucket-bytes", type=_bucket_bytes_arg, default=0,
                     help="gradient-sync bucket size target; 0 = single fused "
-                         "buffer (see docs/gradient_sync.md)")
+                         "buffer; 'auto' = autotuned at resolve time "
+                         "(see docs/gradient_sync.md)")
+    ap.add_argument("--sweep-bucket-bytes", action="store_true",
+                    help="bucket-size sweep: compile the sync-only program "
+                         "per candidate bucket_bytes at production scale, "
+                         "audit the HLO, gate the autotuner's pick against "
+                         "the measured optimum bracket, and save "
+                         "bucket_sweep__<arch>__<mesh>.json")
+    ap.add_argument("--smoke-arch", action="store_true",
+                    help="--sweep-bucket-bytes: use the arch's smoke "
+                         "variant (CI-sized; full archs near the knee need "
+                         "thousands of buckets, which the sweep skips "
+                         "compiling)")
     ap.add_argument("--inject-faults", action="store_true",
                     help="mark the leading DP torus axis down "
                          "(testing/chaos.FaultPlan): the grad-sync strategy "
@@ -499,6 +716,14 @@ def main():
     if args.chaos_train:
         chaos_train(args.fault_step, args.out,
                     metrics_out=args.metrics_out, trace_out=args.trace_out)
+        return
+
+    if args.sweep_bucket_bytes:
+        if not args.arch:
+            raise SystemExit("--sweep-bucket-bytes needs --arch")
+        sweep_bucket_bytes(args.arch, multi_pod=args.multi_pod,
+                           sync_strategy=args.sync, out_dir=args.out,
+                           smoke_arch=args.smoke_arch)
         return
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

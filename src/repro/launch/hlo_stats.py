@@ -122,23 +122,41 @@ def bucket_audit(hlo_text: str, min_bytes: int = 0) -> dict:
     reduce-scatter (+ all-reduce + all-gather) chain, and for psum to its
     own all-reduce -- so ``num_exchanges = max(#reduce-scatter,
     #all-reduce)`` over ops of at least ``min_bytes`` (filter out tiny
-    metric/loss psums with e.g. ``min_bytes=1024``). A fully fused sync
-    shows 1; a multi-bucket sync shows one per bucket, which is the
-    structural proof that XLA *can* overlap each exchange with remaining
-    backward compute.
+    metric/loss psums). A fully fused sync shows 1; a multi-bucket sync
+    shows one per bucket, which is the structural proof that XLA *can*
+    overlap each exchange with remaining backward compute.
+
+    Ops below the floor are not silently hidden: the ``dropped`` entry
+    reports their count/bytes (and per-kind split) so an audit whose floor
+    swallowed real gradient buckets -- e.g. the sub-KiB fp32 group of a
+    small model -- is visible in the artifact. Callers should derive
+    ``min_bytes`` from the resolved bucket schedule (see
+    ``launch.dryrun``), not hardcode it.
     """
-    sched = [op for op in collective_schedule(hlo_text)
-             if op["nbytes"] >= min_bytes]
+    all_ops = collective_schedule(hlo_text)
+    sched = [op for op in all_ops if op["nbytes"] >= min_bytes]
+    dropped_ops = [op for op in all_ops if op["nbytes"] < min_bytes]
     by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
     for op in sched:
         by_kind[op["kind"]]["count"] += 1
         by_kind[op["kind"]]["bytes"] += op["nbytes"]
+    dropped_by_kind: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for op in dropped_ops:
+        dropped_by_kind[op["kind"]]["count"] += 1
+        dropped_by_kind[op["kind"]]["bytes"] += op["nbytes"]
     n_rs = by_kind["reduce-scatter"]["count"]
     n_ar = by_kind["all-reduce"]["count"]
     return {
         "num_exchanges": max(n_rs, n_ar),
         "by_kind": dict(by_kind),
         "ops": sched,
+        "dropped": {
+            "min_bytes": min_bytes,
+            "count": len(dropped_ops),
+            "bytes": sum(op["nbytes"] for op in dropped_ops),
+            "by_kind": dict(dropped_by_kind),
+        },
     }
 
 

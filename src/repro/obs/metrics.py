@@ -167,6 +167,27 @@ class MetricsRegistry:
         with self._lock:
             return sorted(n for n in self._metrics if n.startswith(prefix))
 
+    def remove_prefix(self, prefix: str) -> int:
+        """Drop every instrument whose name starts with ``prefix``; returns
+        how many were removed.
+
+        For metric families that describe a *current configuration* rather
+        than an accumulating series -- e.g. the ``grad_sync/bucketNN/*``
+        schedule gauges -- a re-configuration (elastic downgrade, sync-path
+        switch) can shrink the family, and the survivors of a plain
+        re-publish would be stale. Publishers clear the family first so the
+        exported set always matches the live schedule. An empty ``prefix``
+        is rejected (clearing the whole registry is never what a publisher
+        means).
+        """
+        if not prefix:
+            raise ValueError("remove_prefix requires a non-empty prefix")
+        with self._lock:
+            doomed = [n for n in self._metrics if n.startswith(prefix)]
+            for n in doomed:
+                del self._metrics[n]
+            return len(doomed)
+
     def snapshot(self) -> dict[str, dict]:
         """All instruments rendered to JSON-ready dicts, name-sorted."""
         with self._lock:

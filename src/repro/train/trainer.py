@@ -314,10 +314,14 @@ class Trainer:
                 while True:
                     context = ("startup" if supervisor.recoveries == 0
                                else "elastic")
+                    # params_like: lets bucket_bytes="auto" tune against
+                    # the real gradient structure (and re-tune for the
+                    # degraded strategy after an elastic downgrade)
                     sync_cfg, sync_events = \
                         grad_sync_lib.resolve_sync_config(
                             cfg.grad_sync, grid, self.mesh, self.dp_axes,
-                            down_axes=supervisor.down_axes, context=context)
+                            down_axes=supervisor.down_axes, context=context,
+                            params_like=state.params)
                     for ev in sync_events:
                         ev = dict(ev)
                         event(ev.pop("event"), **ev)

@@ -56,6 +56,29 @@ def test_partition_single_oversized_leaf_gets_own_bucket():
     assert partition_buckets([100, 5, 5], 10) == [[0], [1, 2]]
 
 
+@settings(max_examples=50, deadline=None)
+@given(sizes=st.lists(st.integers(0, 4096), min_size=0, max_size=40),
+       bucket_bytes=st.integers(1, 8192))
+def test_partition_no_undersized_tail_bucket(sizes, bucket_bytes):
+    """Regression (ISSUE 10): the greedy partition used to leave a trailing
+    bucket far below target (worst case one tiny leaf) -- a pure-latency
+    straggler issued last. Whenever there are >=2 buckets, every bucket,
+    the last included, must now be >= bucket_bytes/2."""
+    buckets = partition_buckets(sizes, bucket_bytes)
+    if len(buckets) >= 2:
+        for b in buckets:
+            assert 2 * sum(sizes[i] for i in b) >= bucket_bytes
+
+
+def test_partition_tail_merge_regression():
+    # [10, 10, 1]: tail bucket [1] is < target/2 -> merged into predecessor
+    assert partition_buckets([10, 10, 1], 10) == [[0], [1, 2]]
+    # a tail >= half the target stays its own bucket
+    assert partition_buckets([10, 10, 6], 10) == [[0], [1], [2]]
+    # single bucket total: nothing to merge into
+    assert partition_buckets([3], 10) == [[0]]
+
+
 # --------------------------------------------------------------- layout --
 
 def _mixed_tree(rng):
@@ -218,6 +241,83 @@ def test_hlo_shows_independent_collectives_per_bucket():
     # every bucket produced its own full torus chain
     assert bucketed["by_kind"]["reduce-scatter"]["count"] == 4
     assert bucketed["by_kind"]["all-gather"]["count"] == 4
+
+
+# ------------------------------------------------- per-leaf path grouping --
+
+def _many_small_leaves_tree(n=24):
+    """A TP-ish model slice: a few large kernels plus many small replicated
+    scales/biases -- the regime where one-psum-per-leaf is latency-bound."""
+    rng = np.random.RandomState(3)
+    tree = {}
+    for i in range(3):
+        tree[f"block{i}"] = {
+            "kernel": rng.randn(WORLD, 512, 8).astype(np.float32)}
+    for i in range(n):
+        tree[f"norm{i:02d}"] = {
+            "gain": rng.randn(WORLD, 17).astype(np.float32)}
+    return tree
+
+
+def test_per_leaf_layout_groups_small_leaves():
+    tree = jax.tree.map(lambda x: x[0], _many_small_leaves_tree())
+    cfg = GradSyncConfig(fuse=False, comm_dtype=jnp.float32, bucket_bytes=0)
+    layout = bucket_layout(tree, cfg)
+    per_leaf = [b for b in layout if b["mode"] == "per_leaf"]
+    grouped = [b for b in layout if b["mode"] == "grouped"]
+    assert len(per_leaf) == 3            # the large kernels
+    assert len(grouped) == 1             # all 24 gains share one psum
+    assert grouped[0]["num_leaves"] == 24
+    # bucket_bytes partitions the shared buffer too
+    cfg_b = GradSyncConfig(fuse=False, comm_dtype=jnp.float32,
+                           bucket_bytes=6 * 17 * 4)
+    grouped_b = [b for b in bucket_layout(tree, cfg_b)
+                 if b["mode"] == "grouped"]
+    assert len(grouped_b) == 4
+
+
+@pytest.mark.multidevice
+def test_per_leaf_grouped_sync_matches_oracle():
+    tree = _many_small_leaves_tree()
+    for bb in (0, 6 * 17 * 4):
+        cfg = GradSyncConfig(strategy="torus2d", fuse=False,
+                             comm_dtype=jnp.float32, bucket_bytes=bb)
+        out = run_sync(jax.tree.map(jnp.asarray, tree), cfg)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.broadcast_to(b, np.asarray(a).shape),
+                rtol=1e-5, atol=1e-5),
+            out, oracle(tree))
+
+
+@pytest.mark.multidevice
+def test_per_leaf_grouping_reduces_hlo_collectives():
+    """Acceptance criterion (ISSUE 10): for a model with many small leaves
+    the fuse=False path must compile to fewer collective ops than
+    one-exchange-per-leaf."""
+    mesh = get_mesh()
+    n_small = 24
+    tree = jax.tree.map(lambda x: x[0],
+                        _many_small_leaves_tree(n_small))
+    n_leaves = len(jax.tree.leaves(tree))
+    cfg = GradSyncConfig(strategy="torus2d", fuse=False,
+                         comm_dtype=jnp.float32, bucket_bytes=0)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)
+    def f(t):
+        return sync_tree(t, GRID, cfg)
+
+    hlo = jax.jit(f).lower(tree).compile().as_text()
+    n_coll = len(hlo_stats.collective_schedule(hlo))
+    # old behavior: >= one collective per leaf (torus2d large leaves emit
+    # several). New: 3 large-leaf chains + ONE grouped psum.
+    assert n_coll < n_leaves, (n_coll, n_leaves)
+    # 3 large-leaf torus chains (one y-phase all-reduce each) + exactly ONE
+    # grouped psum covering all 24 small leaves
+    n_ar = sum(1 for op in hlo_stats.collective_schedule(hlo)
+               if op["kind"] == "all-reduce")
+    assert n_ar == 4, n_ar
 
 
 # ------------------------------------------------------------ cost model --

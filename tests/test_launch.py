@@ -99,6 +99,42 @@ def test_hlo_stats_parsing():
     assert st["total_count"] == 4
 
 
+def test_bucket_audit_reports_dropped_ops():
+    """Regression (ISSUE 10): ops under the min_bytes floor used to vanish
+    from the audit silently -- a sub-KiB fp32 bucket of a small model was
+    simply missing. They must now be surfaced in the ``dropped`` entry."""
+    text = """
+      %ar0 = f32[65536]{0} all-reduce(%a), replica_groups=...
+      %ar1 = f32[64]{0} all-reduce(%b), replica_groups=...
+      %ar2 = f32[1]{0} all-reduce(%c), replica_groups=...
+    """
+    audit = hlo_stats.bucket_audit(text, min_bytes=1024)
+    assert audit["num_exchanges"] == 1
+    assert audit["dropped"]["count"] == 2
+    assert audit["dropped"]["bytes"] == 64 * 4 + 4
+    assert audit["dropped"]["min_bytes"] == 1024
+    assert audit["dropped"]["by_kind"]["all-reduce"]["count"] == 2
+    # floor 0 drops nothing
+    audit0 = hlo_stats.bucket_audit(text, min_bytes=0)
+    assert audit0["num_exchanges"] == 3
+    assert audit0["dropped"]["count"] == 0
+
+
+def test_dryrun_audit_floor_derived_from_schedule():
+    """The dry-run's audit floor tracks the resolved schedule's smallest
+    exchange instead of hardcoding 1 KiB (ISSUE 10 bugfix)."""
+    from repro.launch.dryrun import _audit_floor
+    # fp32 group of a small model: 272-byte exchange must stay in view
+    assert _audit_floor({"min_exchange_bytes": 272}) == 272
+    # huge buckets: clamp to the historical 1 KiB (still drops loss psums)
+    assert _audit_floor({"min_exchange_bytes": 4 << 20}) == 1024
+    # degenerate tiny exchange: never below 16 B (scalar metric psums)
+    assert _audit_floor({"min_exchange_bytes": 4}) == 16
+    # FSDP: no manual schedule -> historical floor
+    assert _audit_floor({}) == 1024
+    assert _audit_floor({"min_exchange_bytes": None}) == 1024
+
+
 def test_shapes_and_long_variant():
     assert SHAPES["train_4k"].step == "train"
     assert SHAPES["long_500k"].step == "decode"

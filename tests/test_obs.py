@@ -311,12 +311,64 @@ def test_record_bucket_metrics_gauges():
     assert len(layout) == 4
     snap = reg.snapshot()
     assert snap["grad_sync/num_buckets"]["value"] == 4
+    assert snap["grad_sync/num_exchanges"]["value"] == 4
     assert snap["grad_sync/total_nbytes"]["value"] == 4 * 64 * 64 * 4
     assert snap["grad_sync/bucket00/nbytes"]["value"] == 64 * 64 * 4
-    # per-leaf sync (fuse=False) has no bucket schedule to publish
-    assert record_bucket_metrics(
-        tree, GradSyncConfig(fuse=False), MetricsRegistry()) == []
+    # per-leaf sync (fuse=False): every large kernel is its own strategy
+    # exchange; no small leaves here, so zero grouped buckets
+    reg2 = MetricsRegistry()
+    layout2 = record_bucket_metrics(
+        tree, GradSyncConfig(fuse=False, comm_dtype=jnp.float32), reg2)
+    assert [b["mode"] for b in layout2] == ["per_leaf"] * 4
+    snap2 = reg2.snapshot()
+    assert snap2["grad_sync/num_exchanges"]["value"] == 4
+    assert snap2["grad_sync/per_leaf_exchanges"]["value"] == 4
+    assert snap2["grad_sync/grouped_buckets"]["value"] == 0
     assert record_bucket_metrics(tree, cfg, None) == []
+
+
+def test_record_bucket_metrics_clears_stale_gauges():
+    """An elastic re-resolve that shrinks the schedule (or switches the
+    sync path) must not leave the previous run's per-bucket gauges in the
+    registry -- they would be exported as current (ISSUE 10 bugfix)."""
+    import jax.numpy as jnp
+    from repro.core.grad_sync import GradSyncConfig, record_bucket_metrics
+
+    tree = {f"layer{i:02d}": {"kernel": np.zeros((64, 64), np.float32)}
+            for i in range(4)}
+    reg = MetricsRegistry()
+    record_bucket_metrics(
+        tree, GradSyncConfig(fuse=True, comm_dtype=jnp.float32,
+                             bucket_bytes=16 * 1024), reg)
+    assert "grad_sync/bucket03/nbytes" in reg.names("grad_sync/")
+    # re-resolve to the fully-fused schedule: one bucket
+    record_bucket_metrics(
+        tree, GradSyncConfig(fuse=True, comm_dtype=jnp.float32,
+                             bucket_bytes=0), reg)
+    names = reg.names("grad_sync/")
+    assert "grad_sync/bucket00/nbytes" in names
+    assert "grad_sync/bucket03/nbytes" not in names
+    assert reg.snapshot()["grad_sync/num_buckets"]["value"] == 1
+    # switch to the per-leaf path: fused-only gauges must not linger
+    record_bucket_metrics(
+        tree, GradSyncConfig(fuse=False, comm_dtype=jnp.float32), reg)
+    names = reg.names("grad_sync/")
+    assert "grad_sync/num_buckets" not in names
+    assert "grad_sync/bucket00/nbytes" not in names
+    assert reg.snapshot()["grad_sync/per_leaf_exchanges"]["value"] == 4
+
+
+def test_registry_remove_prefix():
+    reg = MetricsRegistry()
+    reg.counter("a/x").inc()
+    reg.gauge("a/y").set(2)
+    reg.gauge("ab").set(3)
+    reg.gauge("b/z").set(4)
+    assert reg.remove_prefix("a/") == 2
+    assert reg.names() == ["ab", "b/z"]
+    assert reg.remove_prefix("nope/") == 0
+    with pytest.raises(ValueError):
+        reg.remove_prefix("")
 
 
 # ------------------------------------------- trainer smoke (acceptance) --
